@@ -1,0 +1,124 @@
+"""Shared benchmark harness utilities (small-scale paper reproductions).
+
+All benchmarks run the paper's protocol at reduced scale on CPU (see
+DESIGN.md section 2): the paper's datasets are unavailable offline, so the
+seeded synthetic corpora stand in and results are compared *relatively*
+(method orderings and reduction percentages, not absolute PPL)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, RankConfig, TrainConfig
+from repro.core.rewards import flops_fraction
+from repro.data.synthetic import SyntheticLM
+from repro.models import transformer as tr
+from repro.models.api import get_model
+from repro.optim import adamw
+from repro.train.loop import make_train_step
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(parents=True, exist_ok=True)
+
+BENCH_SEQ = 128
+BENCH_BATCH = 8
+BENCH_STEPS = 80
+BENCH_VOCAB_SEED = 11
+
+
+def bench_cfg(mode: str, **rank_kw) -> ModelConfig:
+    base = get_config("drrl-paper", reduced=True)
+    # slightly larger than the smoke config so spectra are non-trivial
+    base = base.with_(num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+                      head_dim=32, d_ff=256, vocab_size=512)
+    grid = (8, 12, 16, 20, 24, 28, 32)
+    return base.with_(rank=RankConfig(mode=mode, rank_grid=grid,
+                                      fixed_rank=16, **rank_kw))
+
+
+def train_lm(cfg: ModelConfig, *, steps: int = BENCH_STEPS, seed: int = 0,
+             agent=None, drrl_refresh: int = 20) -> Dict:
+    """Train the bench LM with the given rank mode active during forward
+    (the paper's protocol: identical hyperparameters across methods)."""
+    fns = get_model(cfg)
+    tc = TrainConfig(global_batch=BENCH_BATCH, seq_len=BENCH_SEQ, lr=1e-3,
+                     total_steps=steps, warmup_steps=steps // 10,
+                     weight_decay=0.01, seed=seed)
+    data = SyntheticLM(cfg.vocab_size, BENCH_SEQ, BENCH_BATCH,
+                       seed=BENCH_VOCAB_SEED)
+
+    kw = {}
+    if cfg.rank.mode == "drrl":
+        assert agent is not None
+
+    def loss_fn(p, b, rng):
+        extra = {}
+        if cfg.rank.mode in ("drrl",):
+            extra = {"policy_params": agent, "rank_rng": rng}
+        elif cfg.rank.mode in ("random",):
+            extra = {"rank_rng": rng}
+        return fns.loss(p, b, **extra)
+
+    step_fn = jax.jit(make_train_step(cfg, tc, loss_fn))
+    params = fns.init(jax.random.PRNGKey(seed))
+    opt = adamw.init(params)
+    losses = []
+    t0 = time.monotonic()
+    for i in range(steps):
+        params, opt, m = step_fn(params, opt, data.batch_at(i),
+                                 jax.random.fold_in(jax.random.PRNGKey(7), i))
+        losses.append(float(m["loss"]))
+    wall = time.monotonic() - t0
+    return {"params": params, "losses": losses, "wall_s": wall, "fns": fns,
+            "tc": tc}
+
+
+def eval_ppl(cfg: ModelConfig, params, fns, *, agent=None, n_batches: int = 8,
+             seed: int = 999) -> float:
+    data = SyntheticLM(cfg.vocab_size, BENCH_SEQ, BENCH_BATCH, seed=seed)
+    tot = 0.0
+    extra = {}
+    if cfg.rank.mode == "drrl":
+        extra = {"policy_params": agent,
+                 "rank_rng": jax.random.PRNGKey(0)}
+    elif cfg.rank.mode == "random":
+        extra = {"rank_rng": jax.random.PRNGKey(0)}
+    lf = jax.jit(lambda p, b, i: fns.loss(p, b, **extra)[0])
+    for i in range(n_batches):
+        tot += float(lf(params, data.batch_at(10_000 + i), i))
+    return float(np.exp(tot / n_batches))
+
+
+def attn_flops_fraction(cfg: ModelConfig, params, *, agent=None,
+                        seed: int = 3) -> float:
+    """Measured mean attention-FLOPs fraction vs full rank (score+value
+    terms, Eq. 8 normalisation) over eval batches."""
+    if cfg.rank.mode == "off":
+        return 1.0
+    if cfg.rank.mode in ("performer", "nystrom"):
+        # linear methods: features/landmarks m vs seq: (m + dv) / (s + dv)
+        dh = cfg.resolved_head_dim()
+        m = max(2 * dh, 4 * cfg.rank.fixed_rank) if cfg.rank.mode == "performer" \
+            else cfg.rank.fixed_rank
+        return float((m + dh) / (BENCH_SEQ + dh))
+    data = SyntheticLM(cfg.vocab_size, BENCH_SEQ, BENCH_BATCH, seed=seed)
+    extra = {"collect_aux": "ranks", "rank_rng": jax.random.PRNGKey(1)}
+    if cfg.rank.mode == "drrl":
+        extra["policy_params"] = agent
+    _, aux = tr.forward_dense(cfg, params, data.batch_at(0)["tokens"], **extra)
+    ranks = np.asarray(aux["layers"]["rank"], np.float32)
+    dh = cfg.resolved_head_dim()
+    return float(np.mean(np.asarray(flops_fraction(jnp.asarray(ranks), dh, dh))))
+
+
+def save_json(name: str, obj) -> pathlib.Path:
+    p = ART / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=2))
+    return p

@@ -1,0 +1,106 @@
+"""HLO forensics for the perf hillclimb: lower one cell and report the
+largest collectives and the largest tensor-producing ops, so every
+hypothesis in EXPERIMENTS.md section Perf is grounded in the compiled IR.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.hlo_forensics --arch qwen2.5-14b \
+      --cell train_4k [--layers 2] [--remat dots] [--topk 15]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import re            # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import SHAPE_CELLS  # noqa: E402
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DTB = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s8": 1, "u8": 1, "pred": 1}
+
+
+def shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTB.get(dt, 0)
+
+
+def forensics(hlo: str, topk: int = 15):
+    colls, ops = [], []
+    for line in hlo.splitlines():
+        line = line.strip()
+        if not ("=" in line and "[" in line):
+            continue
+        rhs = line.split("=", 1)
+        shapes = re.findall(r"\w+\[[0-9,]*\]", rhs[1].split("(")[0])
+        nbytes = sum(shape_bytes(s) for s in shapes)
+        m = re.search(r"\]\**\)?\s*(\w[\w-]*)\(", rhs[1])
+        head = rhs[1].split("(")[0].split()
+        opname = m.group(1) if m else (head[-1] if head else "?")
+        if any(c in line for c in ("all-reduce", "all-gather", "reduce-scatter",
+                                   "all-to-all", "collective-permute")):
+            colls.append((nbytes, opname, line[:180]))
+        elif nbytes > 0:
+            ops.append((nbytes, opname, line[:150]))
+    colls.sort(reverse=True)
+    ops.sort(reverse=True)
+    return colls[:topk], ops[:topk]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override layer count (unrolled when set)")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--sharding", default=None)
+    ap.add_argument("--topk", type=int, default=15)
+    ap.add_argument("--static-rank", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    overrides = {}
+    if args.layers:
+        overrides.update(num_layers=args.layers, scan_layers=False)
+        if args.arch == "seamless-m4t-medium":
+            overrides["num_encoder_layers"] = args.layers
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.sharding:
+        overrides["sharding"] = args.sharding
+
+    cell = next(c for c in SHAPE_CELLS if c.name == args.cell)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    fn, fargs, outs = build_cell(args.arch, cell, mesh, overrides=overrides,
+                                 static_rank=args.static_rank)
+    with mesh:
+        jitted = jax.jit(fn, out_shardings=outs) if outs else jax.jit(fn)
+        compiled = jitted.lower(*fargs).compile()
+    ca = compiled.cost_analysis() or {}
+    print(f"flops={ca.get('flops', 0):.4e}  bytes={ca.get('bytes accessed', 0):.4e}")
+    colls, ops = forensics(compiled.as_text(), args.topk)
+    print(f"\n== top {args.topk} collectives (per-device result bytes) ==")
+    for b, op, line in colls:
+        print(f"  {b / 1e9:9.3f} GB  {line}")
+    print(f"\n== top {args.topk} ops by result bytes ==")
+    for b, op, line in ops:
+        print(f"  {b / 1e9:9.3f} GB  {op:28s} {line[:100]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape x mesh) from the compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / 197e12          [bf16 peak / chip]
+  memory     = HLO_bytes_per_device / 819e9           [HBM bw / chip]
+  collective = collective_bytes_per_device / 50e9     [ICI bw / link]
+
+Calibration note (verified in-repo): compiled.cost_analysis() reports the
+PER-DEVICE partitioned program, so no further division by chip count.
+MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train cells
+(3x forward for fwd+bwd), 2 N D for single forward (prefill), 2 N_active
+per generated token for decode.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+# analytic params (from ModelConfig.n_params / n_active_params, precomputed
+# lazily below to avoid importing jax here)
+_CACHE = {}
+
+
+def _counts(arch: str):
+    if arch in _CACHE:
+        return _CACHE[arch]
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    na = cfg.n_active_params()
+    _CACHE[arch] = (n, na, cfg)
+    return _CACHE[arch]
+
+
+def model_flops(arch: str, cell: str, devices: int) -> float:
+    """Global useful model FLOPs for this cell (forward+backward for train)."""
+    n, na, cfg = _counts(arch)
+    non_emb = na - cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2)
+    seq, batch = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                  "decode_32k": (32768, 128), "long_500k": (524288, 1)}[cell]
+    if cell == "train_4k":
+        return 6.0 * non_emb * seq * batch
+    if cell == "prefill_32k":
+        return 2.0 * non_emb * seq * batch
+    # decode: one token per sequence
+    return 2.0 * non_emb * 1 * batch
+
+
+def analyse(rec: dict) -> dict:
+    dev = rec["devices"]
+    comp = rec["flops"] / PEAK
+    mem = rec["bytes_accessed"] / HBM
+    coll = rec["collectives"]["total"] / ICI
+    dominant = max((comp, "compute"), (mem, "memory"), (coll, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["cell"], dev)
+    hlo_global = rec["flops"] * dev
+    useful = mf / hlo_global if hlo_global else 0.0
+    bound = max(comp, mem, coll)
+    # roofline fraction: useful model FLOP/s achievable vs peak, assuming the
+    # dominant term sets the step time
+    mfu_bound = (mf / dev / PEAK) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "cell": rec["cell"], "mesh": rec["mesh"],
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": useful, "roofline_frac": mfu_bound,
+        "flops_dev": rec["flops"], "bytes_dev": rec["bytes_accessed"],
+        "coll_dev": rec["collectives"]["total"],
+    }
+
+
+def load_all(mesh: str = "single", tag: str = "", prefer_calib: bool = True):
+    """Load artifacts; when a '__calib' (scan-corrected) artifact exists for a
+    cell it replaces the raw scanned one (see dryrun.run_cell_calibrated)."""
+    recs = {}
+    for f in sorted(ART.glob(f"*__{mesh}{tag}.json")):
+        parts = f.stem.split("__")
+        if not tag and len(parts) != 3:
+            continue
+        rec = json.loads(f.read_text())
+        if rec.get("ok"):
+            recs[(rec["arch"], rec["cell"])] = rec
+    if prefer_calib and not tag:
+        for f in sorted(ART.glob(f"*__{mesh}__calib.json")):
+            rec = json.loads(f.read_text())
+            if rec.get("ok"):
+                recs[(rec["arch"], rec["cell"])] = rec
+    return [analyse(r) for _, r in sorted(recs.items())]
+
+
+def fmt_table(rows) -> str:
+    hdr = (f"{'arch':22s} {'cell':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['cell']:12s} {r['compute_s']:.3e} "
+            f"{r['memory_s']:.3e} {r['collective_s']:.3e} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:6.2f} "
+            f"{100*r['roofline_frac']:6.1f}%")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load_all(args.mesh, args.tag)
+    if args.csv:
+        print("arch,cell,mesh,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,roofline_frac")
+        for r in rows:
+            print(f"{r['arch']},{r['cell']},{r['mesh']},{r['compute_s']:.6e},"
+                  f"{r['memory_s']:.6e},{r['collective_s']:.6e},"
+                  f"{r['dominant']},{r['useful_ratio']:.4f},"
+                  f"{r['roofline_frac']:.4f}")
+    else:
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
+benchmark; derived = the headline number it reproduces).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.monotonic()
+    out = fn(*a, **kw)
+    return out, (time.monotonic() - t0) * 1e6
+
+
+def bench_table1(quick=False):
+    from benchmarks.table1_lm import run
+    res, us = _timed(run, quick=quick)
+    drrl, full = res["drrl"], res["off"]
+    derived = (f"drrl_ppl={drrl['ppl']};full_ppl={full['ppl']};"
+               f"drrl_flops_frac={drrl['attn_flops_frac']}")
+    return us, derived
+
+
+def bench_table2(quick=False):
+    from benchmarks.table2_ablation import run
+    res, us = _timed(run, quick=quick)
+    derived = ";".join(f"{k}={v['ppl']}" for k, v in res.items())
+    return us, derived
+
+
+def bench_table3(quick=False):
+    from benchmarks.table3_downstream import run
+    res, us = _timed(run, quick=quick)
+    derived = ";".join(f"{k}={v['accuracy']}" for k, v in res.items())
+    return us, derived
+
+
+def bench_fig2(quick=False):
+    from benchmarks.fig2_training import run
+    res, us = _timed(run, quick=quick)
+    derived = (f"final_loss={res['lm_loss_curve'][-1]};"
+               f"final_reward={res['reward_curve'][-1]}")
+    return us, derived
+
+
+def bench_fig3(quick=False):
+    from benchmarks.fig3_rank_evolution import run
+    res, us = _timed(run, quick=quick)
+    derived = (f"adaptive_layers={res['adaptive']['per_layer_mean_rank']};"
+               f"drrl_mean={res['drrl']['overall']}")
+    return us, derived
+
+
+def bench_fig4(quick=False):
+    from benchmarks.fig4_flops_scaling import run
+    res, us = _timed(run, quick=quick)
+    derived = f"reduction_at_L4096={res['claim_L4096_reduction_pct']}%"
+    return us, derived
+
+
+def bench_fig5(quick=False):
+    from benchmarks.fig5_perturbation import run
+    res, us = _timed(run, quick=quick)
+    import numpy as np
+    tr_frac = float(np.mean(np.asarray(res["trust_region"], dtype=float)))
+    derived = f"trust_region_frac={tr_frac:.3f}"
+    return us, derived
+
+
+def bench_roofline(quick=False):
+    from benchmarks.roofline import load_all
+    t0 = time.monotonic()
+    rows = load_all("single")
+    us = (time.monotonic() - t0) * 1e6
+    if not rows:
+        return us, "no_dryrun_artifacts"
+    best = max(rows, key=lambda r: r["roofline_frac"])
+    derived = (f"cells={len(rows)};best={best['arch']}/{best['cell']}"
+               f"@{100 * best['roofline_frac']:.1f}%")
+    return us, derived
+
+
+BENCHES = {
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "table3": bench_table3,
+    "fig2": bench_fig2,
+    "fig3": bench_fig3,
+    "fig4": bench_fig4,
+    "fig5": bench_fig5,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        print(f"# running {name} ...", flush=True)
+        us, derived = BENCHES[name](quick=args.quick)
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Table-3-style downstream fine-tune: classification head on a DR-RL LM,
+comparing full-rank vs DR-RL vs Performer on the synthetic sentiment task.
+
+    PYTHONPATH=src python examples/finetune_classification.py
+"""
+from benchmarks.table3_downstream import run
+
+if __name__ == "__main__":
+    run(ft_steps=40, quick=True)

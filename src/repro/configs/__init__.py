@@ -1,0 +1,41 @@
+"""Config registry: get_config(arch_id[, reduced]) for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (LONG_CONTEXT_ARCHS, SHAPE_CELLS, MLAConfig,
+                                MoEConfig, ModelConfig, RankConfig, RWKVConfig,
+                                ShapeCell, SSMConfig, TrainConfig)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "drrl-paper": "repro.configs.drrl_paper",
+}
+
+ARCH_IDS = tuple(k for k in _ARCH_MODULES if k != "drrl-paper")
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.reduced_config() if reduced else mod.full_config()
+
+
+def cells_for(arch: str):
+    """The assigned shape cells this arch actually runs (skips documented in
+    DESIGN.md section 5): long_500k only for sub-quadratic mixers."""
+    out = []
+    for cell in SHAPE_CELLS:
+        if cell.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+            continue
+        out.append(cell)
+    return out

@@ -1,0 +1,23 @@
+"""deepseek-coder-33b [dense]: 62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256 — llama-arch. [arXiv:2401.14196; hf]"""
+from repro.configs.base import ModelConfig, RankConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-coder-33b", family="dense",
+        num_layers=62, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=19200, vocab_size=32256, head_dim=128,
+        rope_theta=1e5, dtype="bfloat16", param_dtype="bfloat16",
+        remat="dots", sharding="fsdp_tp",
+        rank=RankConfig(mode="off"),
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return full_config().with_(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32", param_dtype="float32",
+        remat="none", max_seq_len=128,
+        rank=RankConfig(mode="off", rank_grid=(4, 8, 12, 16)),
+    )

@@ -1,0 +1,23 @@
+"""qwen2.5-14b [dense]: 48L d_model=5120 40H (GQA kv=8) d_ff=13824
+vocab=152064 — GQA, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.configs.base import ModelConfig, RankConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b", family="dense",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        d_ff=13824, vocab_size=152064, head_dim=128, qkv_bias=True,
+        rope_theta=1e6, dtype="bfloat16", param_dtype="bfloat16",
+        remat="dots", sharding="fsdp_tp",
+        rank=RankConfig(mode="off"),
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return full_config().with_(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32", param_dtype="float32",
+        remat="none", max_seq_len=128,
+        rank=RankConfig(mode="off", rank_grid=(4, 8, 12, 16)),
+    )

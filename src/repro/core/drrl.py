@@ -1,0 +1,155 @@
+"""DR-RL controller: glues spectra -> features -> policy -> guardrail -> rank.
+
+The controller is invoked *inside* each attention layer (per layer, per
+kv-head). Decisions are replicated across the mesh: every feature it consumes
+is a tiny per-head summary (NER grid, Eq.9 bounds, weight stats), so no
+per-token resharding is ever required (DESIGN.md section 3.6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RankConfig
+from repro.core import lowrank as lr
+from repro.core import perturbation as pert
+from repro.core.policy import policy_apply
+
+GRID_FEATS = ("ner", "bounds", "prev_rank")
+
+
+def feat_dims(rank_cfg: RankConfig, h_dim: int = 8) -> Dict[str, int]:
+    g = len(rank_cfg.rank_grid)
+    return {"h_t": h_dim, "w_t": 9, "ner": g, "bounds": g,
+            "prev_rank": g, "layer_id": 1}
+
+
+def init_agent(rng, rank_cfg: RankConfig, d_model: int, *, h_dim: int = 8,
+               conv_width: int = 5, d_pol: int = 64, n_layers: int = 2) -> dict:
+    """Full DR-RL agent params: the 1-D conv featurizer (h_t) + the
+    Transformer policy network (+ value head)."""
+    from repro.core.policy import init_policy
+    k_conv, k_pol = jax.random.split(rng)
+    conv = (jax.random.normal(k_conv, (conv_width, d_model, h_dim), jnp.float32)
+            * (conv_width * d_model) ** -0.5)
+    pol = init_policy(k_pol, feat_dims(rank_cfg, h_dim),
+                      n_actions=len(rank_cfg.rank_grid),
+                      d_pol=d_pol, n_layers=n_layers)
+    pol["conv"] = conv
+    return pol
+
+
+def conv_features(embeddings: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-dynamics feature h_t (paper 4.1.1): depthwise 1-D conv over the
+    input embeddings, mean-pooled over sequence. embeddings: (b, s, d);
+    kernel: (k, d, f). Returns (b, f)."""
+    y = jax.lax.conv_general_dilated(
+        embeddings.astype(jnp.float32),
+        kernel.astype(jnp.float32),
+        window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return jnp.tanh(jnp.mean(y, axis=1))
+
+
+def weight_stats(p_attn: Dict[str, jnp.ndarray], power_iters: int = 3) -> jnp.ndarray:
+    """Layer-parameter feature w_t (paper 4.1.1): mean / var / spectral norm
+    of W_Q, W_K, W_V (9 scalars). Spectral norms via power iteration Eq. 16."""
+    feats = []
+    for name in ("wq", "wk", "wv"):
+        w = p_attn[name].astype(jnp.float32)
+        w2 = w.reshape(w.shape[0], -1)
+        feats += [jnp.mean(w2), jnp.var(w2),
+                  lr.power_iteration_specnorm(w2, power_iters)]
+    return jnp.stack(feats)
+
+
+def rank_grid_index(rank_cfg: RankConfig, rank: jnp.ndarray) -> jnp.ndarray:
+    grid = jnp.asarray(rank_cfg.rank_grid, jnp.int32)
+    return jnp.argmin(jnp.abs(rank[..., None] - grid[None]), axis=-1)
+
+
+def build_features(rank_cfg: RankConfig, ctx: Dict[str, jnp.ndarray],
+                   h_t: jnp.ndarray, w_t: jnp.ndarray, layer_id,
+                   prev_rank: jnp.ndarray) -> Tuple[Dict[str, jnp.ndarray], Tuple]:
+    """Assemble the Eq. 6 state for every (batch, kv-head) pair.
+
+    Returns (feats dict of (B, dim), (b, h) unflatten info)."""
+    k_s2 = ctx["k_s2"]                               # (b, h, d)
+    b, h, d = k_s2.shape
+    grid = jnp.asarray(rank_cfg.rank_grid, jnp.int32)
+    ner = lr.ner_curve(k_s2)                         # (b, h, d)
+    ner_g = jnp.take(ner, jnp.clip(grid - 1, 0, d - 1), axis=-1)   # (b, h, G)
+    hq = ctx["q_s2"].shape[1]
+    # aggregate q-head spectra per kv group (q heads are contiguous per group)
+    q_s2 = (ctx["q_s2"].reshape(b, h, hq // h, d).mean(2)
+            if hq != h else ctx["q_s2"])
+    bounds, norm = pert.guardrail_report(q_s2, k_s2, rank_cfg.rank_grid, d)
+    bounds_rel = bounds / jnp.maximum(norm[..., None], 1e-30)       # (b, h, G)
+    prev_1h = jax.nn.one_hot(rank_grid_index(rank_cfg, prev_rank), len(rank_cfg.rank_grid))
+    B = b * h
+    feats = {
+        "h_t": jnp.broadcast_to(h_t[:, None, :], (b, h, h_t.shape[-1])).reshape(B, -1),
+        "w_t": jnp.broadcast_to(w_t[None, None, :], (b, h, 9)).reshape(B, 9),
+        "ner": ner_g.reshape(B, -1),
+        "bounds": bounds_rel.reshape(B, -1),
+        "prev_rank": prev_1h.reshape(B, -1),
+        "layer_id": jnp.full((B, 1), jnp.asarray(layer_id, jnp.float32).reshape(())),
+    }
+    return feats, (b, h, bounds_rel, norm)
+
+
+def make_action_fn(policy_params: dict, rank_cfg: RankConfig, *,
+                   h_t: jnp.ndarray, greedy: bool = True) -> Callable:
+    """Returns action_fn(ctx, rank_ctx) -> (rank_k (b, hkv), aux dict) for
+    repro.models.attention.mhsa. Applies the Eq. 11 annealed safety mask.
+
+    Reads from rank_ctx: 'prev_rank' (b, hkv) carry, 'layer_id' (traced ok),
+    'w_t' (9,) weight stats of the current layer, 't' RL global step, 'rng'.
+    """
+
+    def action_fn(ctx, rank_ctx):
+        prev = rank_ctx.get("prev_rank")
+        k_s2 = ctx["k_s2"]
+        b, h = k_s2.shape[0], k_s2.shape[1]
+        if prev is None:
+            prev = jnp.full((b, h), rank_cfg.rank_grid[-1], jnp.int32)
+        w_t = rank_ctx.get("w_t")
+        if w_t is None:
+            w_t = jnp.zeros((9,), jnp.float32)
+        layer_id = rank_ctx.get("layer_id", 0)
+        feats, (b, h, bounds_rel, norm) = build_features(
+            rank_cfg, ctx, h_t, w_t, layer_id, prev)
+        logits, value = policy_apply(policy_params, feats)   # (B, G)
+        G = logits.shape[-1]
+        mask_ok = jnp.ones(logits.shape, bool)
+        if rank_cfg.guardrail:
+            eps_t = pert.annealed_threshold(rank_cfg.epsilon0,
+                                            rank_cfg.anneal_lambda,
+                                            rank_ctx.get("t", 0))
+            mask_ok = pert.safety_mask(bounds_rel.reshape(-1, G), eps_t)
+            logits = jnp.where(mask_ok, logits, -1e30)
+        rng = rank_ctx.get("rng")
+        if greedy or rng is None:
+            a_idx = jnp.argmax(logits, axis=-1)
+        else:
+            a_idx = jax.random.categorical(rng, logits)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        logp_a = jnp.take_along_axis(logp, a_idx[:, None], axis=-1)[:, 0]
+        grid = jnp.asarray(rank_cfg.rank_grid, jnp.int32)
+        rank_k = grid[a_idx].reshape(b, h)
+        chosen_bound = jnp.take_along_axis(
+            bounds_rel.reshape(-1, G), a_idx[:, None], axis=-1)[:, 0].reshape(b, h)
+        aux = {
+            "action_idx": a_idx.reshape(b, h),
+            "logits": logits.reshape(b, h, G),
+            "logp": logp_a.reshape(b, h),
+            "value": value.reshape(b, h),
+            "delta_a_rel": chosen_bound,
+            "action_mask": mask_ok.reshape(b, h, G),
+            "features": feats,
+        }
+        return rank_k, aux
+
+    return action_fn

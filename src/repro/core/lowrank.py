@@ -1,0 +1,180 @@
+"""Spectral machinery for DR-RL low-rank attention (TPU-native).
+
+The paper computes batched partial SVDs of attention factors with cuSOLVER
+(GPU). On TPU we instead work with the tiny d_h x d_h Gram matrices of Q/K/V:
+their eigenvalues are the squared singular values and their top-r eigenvectors
+give the optimal rank-r column-space projector (see DESIGN.md section 3).
+Everything here is matmul/eigh on (..., d, d) shapes - no n x n matrix is ever
+materialised.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., n, d) -> Gram (..., d, d) in fp32."""
+    xf = x.astype(jnp.float32)
+    return jnp.einsum("...nd,...ne->...de", xf, xf)
+
+
+def gram_spectrum(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eigendecomposition of a PSD Gram matrix.
+
+    Returns (sigmas_sq, eigvecs) with sigmas_sq sorted DESCENDING;
+    sigmas_sq[i] == sigma_i(x)^2 for the underlying factor x.
+    eigvecs[..., :, i] is the i-th right singular vector of x.
+    """
+    evals, evecs = jnp.linalg.eigh(g.astype(jnp.float32))   # ascending
+    evals = jnp.flip(evals, axis=-1)
+    evecs = jnp.flip(evecs, axis=-1)
+    return jnp.maximum(evals, 0.0), evecs
+
+
+def singular_values(x: jnp.ndarray) -> jnp.ndarray:
+    """Descending singular values of (..., n, d) via the Gram route."""
+    s2, _ = gram_spectrum(gram(x))
+    return jnp.sqrt(s2)
+
+
+def ner_curve(sigmas_sq: jnp.ndarray) -> jnp.ndarray:
+    """Normalized Energy Ratio (paper Eq. 14) for every rank r=1..d.
+
+    sigmas_sq: (..., d) descending. Returns (..., d) with
+    NER[r-1] = sum_{i<=r} sigma_i^2 / sum_j sigma_j^2.
+    """
+    total = jnp.sum(sigmas_sq, axis=-1, keepdims=True)
+    return jnp.cumsum(sigmas_sq, axis=-1) / jnp.maximum(total, 1e-30)
+
+
+def rank_for_energy(sigmas_sq: jnp.ndarray, threshold: float,
+                    r_min: int, r_max: int) -> jnp.ndarray:
+    """Adaptive-SVD baseline: smallest r whose NER >= threshold (clipped)."""
+    ner = ner_curve(sigmas_sq)
+    r = 1 + jnp.argmax(ner >= threshold, axis=-1)   # first index meeting it
+    # if never met (numerical), fall back to r_max
+    met = jnp.any(ner >= threshold, axis=-1)
+    r = jnp.where(met, r, r_max)
+    return jnp.clip(r, r_min, r_max).astype(jnp.int32)
+
+
+def rank_mask(d: int, r) -> jnp.ndarray:
+    """(d,) float mask keeping the first r eigendirections. r may be traced."""
+    return (jnp.arange(d) < r).astype(jnp.float32)
+
+
+def project_masked(x: jnp.ndarray, evecs: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Rank-truncate x (..., n, d) with eigvecs (..., d, d) and mask (..., d).
+
+    Returns x_r = x . E diag(mask) E^T  (same shape as x). This is the
+    'masked' realisation: a single static-shape executable where dynamic rank
+    is expressed through the mask (differentiable, RL-training friendly).
+    """
+    xe = jnp.einsum("...nd,...de->...ne", x.astype(jnp.float32), evecs)
+    xe = xe * mask[..., None, :]
+    out = jnp.einsum("...ne,...de->...nd", xe, evecs)
+    return out.astype(x.dtype)
+
+
+def project_static(x: jnp.ndarray, evecs: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Rank-r factor x~ = x . E[:, :r]  of shape (..., n, r) (static shapes).
+
+    Used by the serving buckets / Pallas kernel: the score contraction runs
+    over r instead of d.
+    """
+    return jnp.einsum("...nd,...dr->...nr", x.astype(jnp.float32),
+                      evecs[..., :, :r]).astype(x.dtype)
+
+
+def mixing_matrix(eq: jnp.ndarray, ek: jnp.ndarray, r: int) -> jnp.ndarray:
+    """M = Eq[:, :r]^T Ek[:, :r] (..., r, r) so that
+    Q_r K_r^T == (Q Eq_r) M (K Ek_r)^T with rank-r factors on both sides."""
+    return jnp.einsum("...dr,...ds->...rs", eq[..., :, :r], ek[..., :, :r])
+
+
+# ---------------------------------------------------------------------------
+# Matmul-only spectral routines (subspace/power iteration)
+# ---------------------------------------------------------------------------
+
+def subspace_iteration(g: jnp.ndarray, r: int, iters: int = 3,
+                       key: Optional[jax.Array] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-r eigenpairs of PSD g (..., d, d) via subspace (block power) iteration.
+
+    Pure matmuls + small QR: the MXU-native alternative to eigh used on the
+    serving path. Returns (evals_desc (..., r), basis (..., d, r))."""
+    d = g.shape[-1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    q0 = jax.random.normal(key, g.shape[:-2] + (d, r), jnp.float32)
+    q, _ = jnp.linalg.qr(q0)
+
+    def body(q, _):
+        z = jnp.einsum("...de,...er->...dr", g, q)
+        q, _ = jnp.linalg.qr(z)
+        return q, None
+
+    q, _ = jax.lax.scan(body, q, None, length=iters)
+    # Rayleigh-Ritz on the subspace
+    h = jnp.einsum("...dr,...de,...es->...rs", q, g, q)
+    evals, u = jnp.linalg.eigh(h)
+    evals = jnp.flip(evals, axis=-1)
+    u = jnp.flip(u, axis=-1)
+    basis = jnp.einsum("...dr,...rs->...ds", q, u)
+    return jnp.maximum(evals, 0.0), basis
+
+
+def incremental_extend(g: jnp.ndarray, basis_r: jnp.ndarray, extra: int,
+                       iters: int = 3, key: Optional[jax.Array] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Incremental SVD update (paper Eq. 12), TPU form.
+
+    Given the cached top-r eigenbasis of g, compute `extra` further
+    eigenpairs by subspace iteration on the deflated operator
+    (I - B B^T) g (I - B B^T). Returns (new_evals (..., extra),
+    extended_basis (..., d, r+extra)). Cost ~ (r'-r)/r' of a fresh solve."""
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    d = g.shape[-1]
+    b = basis_r.astype(jnp.float32)
+
+    def deflate(v):
+        return v - jnp.einsum("...dr,...er,...es->...ds", b, b, v)
+
+    q0 = deflate(jax.random.normal(key, g.shape[:-2] + (d, extra), jnp.float32))
+    q, _ = jnp.linalg.qr(q0)
+
+    def body(q, _):
+        z = deflate(jnp.einsum("...de,...er->...dr", g, q))
+        q, _ = jnp.linalg.qr(z)
+        return q, None
+
+    q, _ = jax.lax.scan(body, q, None, length=iters)
+    h = jnp.einsum("...dr,...de,...es->...rs", q, g, q)
+    evals, u = jnp.linalg.eigh(h)
+    evals = jnp.flip(evals, axis=-1)
+    u = jnp.flip(u, axis=-1)
+    new_basis = jnp.einsum("...dr,...rs->...ds", q, u)
+    return jnp.maximum(evals, 0.0), jnp.concatenate([b, new_basis], axis=-1)
+
+
+def power_iteration_specnorm(m: jnp.ndarray, iters: int = 3,
+                             key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Spectral norm of (..., a, b) via power iteration on M^T M (paper Eq. 16)."""
+    if key is None:
+        key = jax.random.PRNGKey(2)
+    mf = m.astype(jnp.float32)
+    v = jax.random.normal(key, m.shape[:-2] + (m.shape[-1],), jnp.float32)
+    v = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-30)
+
+    def body(v, _):
+        mv = jnp.einsum("...ab,...b->...a", mf, v)
+        mtmv = jnp.einsum("...ab,...a->...b", mf, mv)
+        v = mtmv / (jnp.linalg.norm(mtmv, axis=-1, keepdims=True) + 1e-30)
+        return v, None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    mv = jnp.einsum("...ab,...b->...a", mf, v)
+    return jnp.linalg.norm(mv, axis=-1)

@@ -1,0 +1,57 @@
+"""Greedy oracle for Behaviour-Cloning warm start (paper 4.5.3).
+
+The oracle evaluates the Eq. 13 reward for *every* candidate rank in the grid
+(it can afford the exhaustive sweep offline) and returns the argmax action.
+Fidelity is computed exactly: cosine similarity between the full-rank
+attention output and the rank-r output, per (batch, kv-head).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import RankConfig
+from repro.core import lowrank as lr
+from repro.core import perturbation as pert
+from repro.core.rewards import reward
+from repro.models.attention import attend, apply_rank_masked, spectral_ctx
+from repro.models.common import repeat_kv
+
+
+def oracle_actions(rank_cfg: RankConfig, q: jnp.ndarray, k: jnp.ndarray,
+                   v: jnp.ndarray, *, causal: bool = True
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """q: (b, s, hq, d), k/v: (b, s, hkv, d). Returns (action_idx (b, hkv),
+    aux with per-candidate rewards)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    n_rep = hq // hkv
+    scale = d ** -0.5
+    ctx = spectral_ctx(q, k)
+    o_full = attend(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
+                    scale=scale, causal=causal)
+
+    q_s2 = (ctx["q_s2"].reshape(b, hkv, n_rep, d).mean(2)
+            if hq != hkv else ctx["q_s2"])
+    bounds, norm = pert.guardrail_report(q_s2, ctx["k_s2"], rank_cfg.rank_grid, d)
+    bounds_rel = bounds / jnp.maximum(norm[..., None], 1e-30)
+
+    rewards = []
+    for gi, r in enumerate(rank_cfg.rank_grid):
+        rank_k = jnp.full((b, hkv), r, jnp.int32)
+        rank_q = jnp.repeat(rank_k, n_rep, axis=1) if n_rep > 1 else rank_k
+        q_r, k_r = apply_rank_masked(q, k, ctx, rank_q, rank_k)
+        o_r = attend(q_r, repeat_kv(k_r, n_rep), repeat_kv(v, n_rep),
+                     scale=scale, causal=causal)
+        num = jnp.sum(o_full.astype(jnp.float32) * o_r.astype(jnp.float32),
+                      axis=(1, 3))
+        den = (jnp.linalg.norm(o_full.astype(jnp.float32), axis=(1, 3))
+               * jnp.linalg.norm(o_r.astype(jnp.float32), axis=(1, 3)) + 1e-30)
+        fid = (num / den)                                  # (b, hq)
+        fid_kv = fid.reshape(b, hkv, n_rep).mean(-1) if n_rep > 1 else fid
+        rw = reward(rank_cfg, fid_kv, rank_k, bounds_rel[..., gi], d, d)
+        rewards.append(rw)
+    rewards = jnp.stack(rewards, axis=-1)                  # (b, hkv, G)
+    return jnp.argmax(rewards, axis=-1), {
+        "rewards": rewards, "bounds_rel": bounds_rel}

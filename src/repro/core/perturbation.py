@@ -1,0 +1,93 @@
+"""Online matrix perturbation bounds (paper section 3.3 / 4.2).
+
+All bounds are functions of the singular-value spectra of the attention
+factors, which the Gram route (lowrank.py) provides for free — so the safety
+guardrail costs O(d) per head, not O(n^2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def eckart_young_tail(sigmas_sq: jnp.ndarray, r) -> jnp.ndarray:
+    """||A - A_r||_F = sqrt(sum_{i>r} sigma_i^2)   (paper Eq. 3).
+
+    sigmas_sq: (..., d) descending. r may be a traced integer."""
+    d = sigmas_sq.shape[-1]
+    tail_mask = (jnp.arange(d) >= r).astype(sigmas_sq.dtype)
+    return jnp.sqrt(jnp.sum(sigmas_sq * tail_mask, axis=-1))
+
+
+def rank_transition_norm(sigmas_sq: jnp.ndarray, r, r_new) -> jnp.ndarray:
+    """||A_{r'} - A_r||_F = sqrt(sum_{k in (r, r']} sigma_k^2)  (paper Eq. 4)."""
+    d = sigmas_sq.shape[-1]
+    lo, hi = jnp.minimum(r, r_new), jnp.maximum(r, r_new)
+    in_band = ((jnp.arange(d) >= lo) & (jnp.arange(d) < hi)).astype(sigmas_sq.dtype)
+    return jnp.sqrt(jnp.sum(sigmas_sq * in_band, axis=-1))
+
+
+def output_sensitivity(sigmas_sq: jnp.ndarray, r, v_fro: jnp.ndarray) -> jnp.ndarray:
+    """||Y_{r'} - Y_r||_F <= sigma_{r+1} ||V||_F   (paper Eq. 5 / 10)."""
+    d = sigmas_sq.shape[-1]
+    idx = jnp.clip(r, 0, d - 1)
+    sigma_next = jnp.sqrt(jnp.take_along_axis(
+        sigmas_sq, jnp.broadcast_to(idx, sigmas_sq.shape[:-1])[..., None], axis=-1))[..., 0]
+    return sigma_next * v_fro
+
+
+def delta_a_bound(q_sigmas_sq: jnp.ndarray, k_sigmas_sq: jnp.ndarray, r,
+                  d_head: int) -> jnp.ndarray:
+    """Paper Eq. 9:
+       ||dA||_F <= (||dQ||_2 ||K||_2 + ||Q||_2 ||dK||_2) / sqrt(d)
+    with ||dQ||_2 = sigma_{r+1}(Q) (best rank-r residual spectral norm)."""
+    dd = q_sigmas_sq.shape[-1]
+    idx = jnp.clip(r, 0, dd - 1)
+
+    def at(s2, i):
+        return jnp.sqrt(jnp.take_along_axis(
+            s2, jnp.broadcast_to(i, s2.shape[:-1])[..., None], axis=-1))[..., 0]
+
+    dq = at(q_sigmas_sq, idx)                 # sigma_{r+1}(Q)
+    dk = at(k_sigmas_sq, idx)
+    q_top = jnp.sqrt(q_sigmas_sq[..., 0])     # ||Q||_2
+    k_top = jnp.sqrt(k_sigmas_sq[..., 0])
+    return (dq * k_top + q_top * dk) / jnp.sqrt(float(d_head))
+
+
+def annealed_threshold(eps0: float, lam: float, t) -> jnp.ndarray:
+    """eps_t = eps0 * exp(-lam t)   (paper Eq. 11)."""
+    return eps0 * jnp.exp(-lam * jnp.asarray(t, jnp.float32))
+
+
+def safety_mask(bounds_per_action: jnp.ndarray, eps_t,
+                normaliser: jnp.ndarray = None) -> jnp.ndarray:
+    """Boolean mask over the rank grid: True = action allowed (paper 4.3.1).
+
+    bounds_per_action: (..., n_actions) predicted ||dA||_F per candidate rank.
+    Bounds are normalised by ||A||-scale (q_top*k_top/sqrt(d)) when given so
+    that eps_t is a relative threshold. The *largest* rank is always allowed
+    (the guardrail may never leave the agent without a legal action)."""
+    b = bounds_per_action
+    if normaliser is not None:
+        b = b / jnp.maximum(normaliser[..., None], 1e-30)
+    ok = b <= eps_t
+    # always allow the most conservative (= highest-rank, lowest-bound) action
+    ok = ok.at[..., -1].set(True)
+    return ok
+
+
+def guardrail_report(q_sigmas_sq: jnp.ndarray, k_sigmas_sq: jnp.ndarray,
+                     rank_grid: Tuple[int, ...], d_head: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorised Eq. 9 bound over a rank grid.
+
+    Returns (bounds (..., n_actions), normaliser (...,)) where normaliser is
+    the ||Q||_2 ||K||_2 / sqrt(d) scale of the full score matrix."""
+    bounds = jnp.stack(
+        [delta_a_bound(q_sigmas_sq, k_sigmas_sq, r, d_head) for r in rank_grid],
+        axis=-1)
+    norm = (jnp.sqrt(q_sigmas_sq[..., 0]) * jnp.sqrt(k_sigmas_sq[..., 0])
+            / jnp.sqrt(float(d_head)))
+    return bounds, norm

@@ -1,0 +1,87 @@
+"""Transformer-based rank-selection policy network (paper section 4.1.3/4.5.1).
+
+The paper uses a distilled GPT-Small-style encoder over the state sequence.
+We realise the state (Eq. 6) as a short sequence of feature-group tokens
+  [ h_t | w_t | NER grid | dA-bound grid | prev-rank | layer-id ]
+each linearly embedded into d_pol, processed by a pre-LN Transformer encoder,
+mean-pooled, and decoded by an MLP into (action logits over the rank grid,
+value estimate) — the value head is used by PPO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+
+FEATURE_ORDER = ("h_t", "w_t", "ner", "bounds", "prev_rank", "layer_id")
+
+
+def init_policy(rng, feat_dims: Dict[str, int], n_actions: int,
+                d_pol: int = 64, n_layers: int = 2, n_heads: int = 4,
+                d_ff: int = 128, dtype=jnp.float32) -> dict:
+    ks = nn.split_keys(rng, 4 + 10 * n_layers)
+    ki = iter(ks)
+    p: dict = {"embed": {}, "layers": []}
+    for name in FEATURE_ORDER:
+        p["embed"][name] = {
+            "w": nn.dense_init(next(ki), feat_dims[name], d_pol, dtype),
+            "b": jnp.zeros((d_pol,), dtype),
+        }
+    for _ in range(n_layers):
+        p["layers"].append({
+            "ln1": jnp.ones((d_pol,), dtype),
+            "wq": nn.dense_init(next(ki), d_pol, d_pol, dtype),
+            "wk": nn.dense_init(next(ki), d_pol, d_pol, dtype),
+            "wv": nn.dense_init(next(ki), d_pol, d_pol, dtype),
+            "wo": nn.dense_init(next(ki), d_pol, d_pol, dtype),
+            "ln2": jnp.ones((d_pol,), dtype),
+            "w1": nn.dense_init(next(ki), d_pol, d_ff, dtype),
+            "w2": nn.dense_init(next(ki), d_ff, d_pol, dtype),
+        })
+    p["ln_f"] = jnp.ones((d_pol,), dtype)
+    p["head"] = {
+        "w1": nn.dense_init(next(ki), d_pol, d_pol, dtype),
+        "w_logits": nn.dense_init(next(ki), d_pol, n_actions, dtype, scale=0.01),
+        "w_value": nn.dense_init(next(ki), d_pol, 1, dtype, scale=0.01),
+    }
+    return p
+
+
+def _encoder_layer(lp: dict, x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """x: (B, T, d_pol) bidirectional self-attention + MLP (pre-LN)."""
+    B, T, D = x.shape
+    dh = D // n_heads
+    h = nn.rms_norm(x, lp["ln1"])
+    q = nn.linear(h, lp["wq"]).reshape(B, T, n_heads, dh)
+    k = nn.linear(h, lp["wk"]).reshape(B, T, n_heads, dh)
+    v = nn.linear(h, lp["wv"]).reshape(B, T, n_heads, dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh ** -0.5
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, T, D)
+    x = x + nn.linear(o, lp["wo"])
+    h = nn.rms_norm(x, lp["ln2"])
+    x = x + nn.linear(jax.nn.gelu(nn.linear(h, lp["w1"])), lp["w2"])
+    return x
+
+
+POLICY_HEADS = 4
+
+
+def policy_apply(p: dict, feats: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """feats[name]: (B, feat_dims[name]). Returns (logits (B, A), value (B,))."""
+    toks = []
+    for name in FEATURE_ORDER:
+        e = p["embed"][name]
+        toks.append(nn.linear(feats[name].astype(e["w"].dtype), e["w"], e["b"]))
+    x = jnp.stack(toks, axis=1)                     # (B, T=6, d_pol)
+    for lp in p["layers"]:
+        x = _encoder_layer(lp, x, POLICY_HEADS)
+    x = nn.rms_norm(jnp.mean(x, axis=1), p["ln_f"])
+    h = jax.nn.gelu(nn.linear(x, p["head"]["w1"]))
+    logits = nn.linear(h, p["head"]["w_logits"])
+    value = nn.linear(h, p["head"]["w_value"])[..., 0]
+    return logits.astype(jnp.float32), value.astype(jnp.float32)

@@ -1,0 +1,85 @@
+"""PPO with GAE for the rank policy (paper 4.5.3, 'Hybrid Training' stage 2).
+
+Trajectories are collected from rollouts of the LM forward pass: each
+(layer, kv-head) decision is one MDP step; the layer index is the time axis
+(ranks evolve layer-to-layer through the prev-rank carry, matching the
+paper's sequential-policy view).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import policy_apply
+
+
+class Trajectory(NamedTuple):
+    feats: Dict[str, jnp.ndarray]   # each (T, B, dim)
+    actions: jnp.ndarray            # (T, B) int32 grid indices
+    logp_old: jnp.ndarray           # (T, B)
+    values_old: jnp.ndarray         # (T, B)
+    rewards: jnp.ndarray            # (T, B)
+    action_mask: jnp.ndarray        # (T, B, A) bool — guardrail mask at collect time
+
+
+def gae(rewards: jnp.ndarray, values: jnp.ndarray, gamma: float = 0.99,
+        lam: float = 0.95) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """rewards/values: (T, B). Episode terminates after the last layer."""
+    T = rewards.shape[0]
+    next_values = jnp.concatenate([values[1:], jnp.zeros_like(values[:1])], 0)
+    deltas = rewards + gamma * next_values - values
+
+    def body(carry, xs):
+        delta = xs
+        adv = delta + gamma * lam * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(body, jnp.zeros_like(deltas[0]),
+                           jnp.flip(deltas, 0))
+    advs = jnp.flip(advs, 0)
+    returns = advs + values
+    return advs, returns
+
+
+def ppo_loss(policy_params: dict, traj: Trajectory, *, clip: float = 0.2,
+             vf_coef: float = 0.5, ent_coef: float = 0.01) -> Tuple[jnp.ndarray, dict]:
+    T, B = traj.actions.shape
+    feats = {k: v.reshape(T * B, -1) for k, v in traj.feats.items()}
+    logits, values = policy_apply(policy_params, feats)
+    logits = jnp.where(traj.action_mask.reshape(T * B, -1), logits, -1e30)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp = jnp.take_along_axis(
+        logp_all, traj.actions.reshape(T * B)[:, None], axis=-1)[:, 0]
+
+    adv, returns = gae(traj.rewards, traj.values_old)
+    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    adv = adv.reshape(T * B)
+    returns = returns.reshape(T * B)
+
+    ratio = jnp.exp(logp - traj.logp_old.reshape(T * B))
+    pg1 = ratio * adv
+    pg2 = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    pg_loss = -jnp.mean(jnp.minimum(pg1, pg2))
+
+    vf_loss = 0.5 * jnp.mean((values - returns) ** 2)
+    probs = jnp.exp(logp_all)
+    entropy = -jnp.mean(jnp.sum(jnp.where(probs > 1e-12, probs * logp_all, 0.0), -1))
+
+    loss = pg_loss + vf_coef * vf_loss - ent_coef * entropy
+    metrics = {"pg_loss": pg_loss, "vf_loss": vf_loss, "entropy": entropy,
+               "ratio_mean": jnp.mean(ratio)}
+    return loss, metrics
+
+
+def bc_loss(policy_params: dict, feats: Dict[str, jnp.ndarray],
+            oracle_actions: jnp.ndarray,
+            action_mask: jnp.ndarray) -> jnp.ndarray:
+    """Behaviour-cloning warm start (paper 4.5.3 stage 1): cross-entropy to
+    the greedy oracle's actions. feats: (N, dim) each; oracle_actions (N,)."""
+    logits, _ = policy_apply(policy_params, feats)
+    logits = jnp.where(action_mask, logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, oracle_actions[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)

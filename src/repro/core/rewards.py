@@ -1,0 +1,44 @@
+"""DR-RL reward function (paper Eq. 8 / Eq. 13).
+
+R_t = alpha * sim(A_full, A_r)  -  beta * FLOPs(r_t)  -  gamma * ||dA||_F
+
+* sim       — cosine similarity between full-rank and rank-r attention
+              *outputs* (computed in the model forward when
+              rank_ctx['compute_fidelity'] is set).
+* FLOPs(r)  — normalised score+value FLOPs at rank r relative to full rank.
+* ||dA||_F  — the Eq. 9 perturbation bound at the chosen rank, normalised by
+              the full-score scale so the penalty is dimensionless.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import RankConfig
+
+
+def flops_fraction(rank: jnp.ndarray, d_head: int, d_v: int) -> jnp.ndarray:
+    """Normalised attention FLOPs at rank r (score contraction r vs d_head;
+    the value aggregation term is unchanged)."""
+    full = d_head + d_v
+    return (rank.astype(jnp.float32) + d_v) / float(full)
+
+
+def reward(rank_cfg: RankConfig, fidelity: jnp.ndarray, rank: jnp.ndarray,
+           delta_a_rel: jnp.ndarray, d_head: int, d_v: int) -> jnp.ndarray:
+    """Element-wise Eq. 13 over whatever batch/head shape the inputs carry."""
+    fl = flops_fraction(rank, d_head, d_v)
+    return (rank_cfg.alpha * fidelity
+            - rank_cfg.beta * fl
+            - rank_cfg.gamma * delta_a_rel)
+
+
+def reward_components(rank_cfg: RankConfig, fidelity, rank, delta_a_rel,
+                      d_head: int, d_v: int) -> Tuple[jnp.ndarray, dict]:
+    r = reward(rank_cfg, fidelity, rank, delta_a_rel, d_head, d_v)
+    return r, {
+        "fidelity": fidelity,
+        "flops_frac": flops_fraction(rank, d_head, d_v),
+        "delta_a_rel": delta_a_rel,
+    }

@@ -1,0 +1,80 @@
+"""Stateless synthetic LM data: batch i is a pure function of (seed, i).
+
+Fault-tolerant by construction — resuming at step i after any failure or a
+*different* device count reproduces the exact token stream with no iterator
+state to checkpoint (only the integer cursor). The stream is a Zipf-ish
+unigram mixture with injected local structure (repeated motifs) so that a
+model can actually reduce loss on it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def zipf_logits(vocab: int, alpha: float = 1.2) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return np.log(p / p.sum()).astype(np.float32)
+
+
+class SyntheticLM:
+    """Deterministic, seekable synthetic corpus."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, alpha: float = 1.2, motif_len: int = 8):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.motif_len = motif_len
+        self._logits = jnp.asarray(zipf_logits(vocab, alpha))
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Pure function of (seed, step) -> {'tokens','labels','mask'}."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s, m = self.global_batch, self.seq_len, self.motif_len
+        base = jax.random.categorical(
+            k1, jnp.broadcast_to(self._logits, (b, s + 1, self.vocab)))
+        # inject motif structure: every other window repeats the previous one
+        n_win = (s + 1) // m
+        rep = jax.random.bernoulli(k2, 0.5, (b, n_win))
+        toks = base[:, :n_win * m].reshape(b, n_win, m)
+        prev = jnp.concatenate([toks[:, :1], toks[:, :-1]], axis=1)
+        toks = jnp.where(rep[:, :, None], prev, toks).reshape(b, n_win * m)
+        full = jnp.concatenate([toks, base[:, n_win * m:]], axis=1)
+        return {
+            "tokens": full[:, :-1].astype(jnp.int32),
+            "labels": full[:, 1:].astype(jnp.int32),
+            "mask": jnp.ones((b, s), jnp.float32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class SyntheticClassification:
+    """Synthetic sentiment-like task for the Table-3 analogue: label is
+    determined by which of two token populations dominates the sequence."""
+
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0):
+        self.vocab, self.seq_len, self.batch, self.seed = vocab, seq_len, batch, seed
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 77), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s, v = self.batch, self.seq_len, self.vocab
+        labels = jax.random.bernoulli(k1, 0.5, (b,)).astype(jnp.int32)
+        lo = jax.random.randint(k2, (b, s), 0, v // 2)
+        hi = jax.random.randint(jax.random.fold_in(k2, 1), (b, s), v // 2, v)
+        bias = jnp.where(labels[:, None] == 1, 0.7, 0.3)
+        pick_hi = jax.random.uniform(k3, (b, s)) < bias
+        toks = jnp.where(pick_hi, hi, lo)
+        return {"tokens": toks.astype(jnp.int32), "labels": labels}

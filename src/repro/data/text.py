@@ -1,0 +1,45 @@
+"""Byte-level corpus pipeline over local text files (the offline stand-in
+for Wikitext/PTB/BookCorpus). Stateless: batch i is a pure function of
+(corpus bytes, seed, i) via strided window sampling."""
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+class ByteCorpus:
+    VOCAB = 256
+
+    def __init__(self, paths: Sequence[str], seq_len: int, global_batch: int,
+                 seed: int = 0, max_bytes: int = 32 * 1024 * 1024):
+        buf = bytearray()
+        for p in paths:
+            path = pathlib.Path(p)
+            if path.is_dir():
+                files = sorted(path.rglob("*.py")) + sorted(path.rglob("*.md"))
+            else:
+                files = [path]
+            for f in files:
+                try:
+                    buf += f.read_bytes()
+                except OSError:
+                    continue
+                if len(buf) >= max_bytes:
+                    break
+        if len(buf) < (seq_len + 1) * 2:
+            raise ValueError("corpus too small")
+        self.data = np.frombuffer(bytes(buf), dtype=np.uint8)
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        b, s = self.global_batch, self.seq_len
+        starts = rng.integers(0, len(self.data) - s - 1, size=b)
+        idx = starts[:, None] + np.arange(s + 1)[None]
+        w = self.data[idx].astype(np.int32)
+        return {"tokens": w[:, :-1], "labels": w[:, 1:],
+                "mask": np.ones((b, s), np.float32)}

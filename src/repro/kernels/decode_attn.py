@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode: one new query token against a (possibly
+rank-truncated) KV cache with a dynamic valid-prefix length.
+
+Grid: (batch*q_heads, kv_blocks) with running-softmax scratch accumulation —
+the split-KV pattern that keeps the MXU busy for long caches at batch decode.
+The cache factor dim may be the truncated rank r (DR-RL serving bucket) or
+the full head dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    n_k = pl.num_programs(1)
+    kv_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (1, r) -> use (8, r) tile
+        k = k_ref[0].astype(jnp.float32)                  # (bk, r)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_k", "interpret"))
+def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
+                 interpret: bool = False):
+    """q: (b, hq, r); k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: ().
+    Returns (b, hq, dv)."""
+    b, hq, r = q.shape
+    hkv, M, dv = k.shape[1], k.shape[2], v.shape[3]
+    n_rep = hq // hkv
+    block_k = min(block_k, max(M, 8))
+    pad_k = (-M) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    M_p = M + pad_k
+
+    qf = q.reshape(b * hq, 1, r)
+    kf = k.reshape(b * hkv, M_p, r)
+    vf = v.reshape(b * hkv, M_p, dv)
+    lens = jnp.broadcast_to(jnp.reshape(kv_len, (1,)), (1,)).astype(jnp.int32)
+
+    grid = (b * hq, M_p // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, r), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, r),
+                         lambda bh, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
+            pl.BlockSpec((1, block_k, dv),
+                         lambda bh, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(b, hq, dv)

@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention with a rank-r score contraction.
+
+The paper's DR-RL serving path feeds rank-r factors q~ (b, h, s, r) and
+k~ (b, h, s, r) (r from the policy's bucket) — the score matmul contracts
+over r instead of d_head, which is where the FLOPs saving lands. The same
+kernel runs the full-rank path (r == d_head).
+
+Tiling: grid (batch*q_heads, q_blocks, kv_blocks), kv innermost so the
+running-softmax accumulators persist in VMEM scratch across kv steps.
+Causal blocks entirely above the diagonal are skipped via @pl.when.
+GQA is handled in the k/v index_map (q-head -> kv-head integer division),
+so the broadcast never materialises in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  sq: int, skv: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, r)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, r)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < skv                               # tail padding
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, dv)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    if causal:
+        # skip blocks entirely above the causal diagonal
+        pl.when(k_start <= q_start + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "block_q", "block_k", "q_offset",
+                     "interpret"))
+def lowrank_flash(q, k, v, *, scale: float, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128, q_offset: int = 0,
+                  interpret: bool = False):
+    """q: (b, hq, sq, r); k: (b, hkv, skv, r); v: (b, hkv, skv, dv).
+    Returns (b, hq, sq, dv). r is the (possibly truncated) contraction dim."""
+    b, hq, sq, r = q.shape
+    hkv, skv, dv = k.shape[1], k.shape[2], v.shape[3]
+    n_rep = hq // hkv
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(skv, 8))
+
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_k
+
+    qf = q.reshape(b * hq, sq_p, r)
+    kf = k.reshape(b * hkv, skv_p, r)
+    vf = v.reshape(b * hkv, skv_p, dv)
+
+    grid = (b * hq, sq_p // block_q, skv_p // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, sq=sq, skv=skv, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, r), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, r),
+                         lambda bh, qi, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
+            pl.BlockSpec((1, block_k, dv),
+                         lambda bh, qi, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, hq, sq_p, dv)
+    return out[:, :, :sq]

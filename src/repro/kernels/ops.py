@@ -1,0 +1,37 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode for
+correctness validation; on TPU they compile through Mosaic. The XLA einsum
+path in repro.models.attention remains the lowering used by the dry-run
+(see DESIGN.md section 3 — kernels are the TPU runtime hot-spot layer)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attn import flash_decode
+from repro.kernels.lowrank_flash import lowrank_flash
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    q_offset: int = 0, interpret=None):
+    """Flash attention over (b, h, s, d) layouts; d may be a truncated rank.
+    See repro.kernels.ref.flash_ref for exact semantics."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return lowrank_flash(q, k, v, scale=scale, causal=causal,
+                         block_q=block_q, block_k=block_k,
+                         q_offset=q_offset, interpret=interpret)
+
+
+def decode_attention(q, k, v, kv_len, *, scale: float, block_k: int = 512,
+                     interpret=None):
+    """Flash-decode; see repro.kernels.ref.decode_ref."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return flash_decode(q, k, v, kv_len, scale=scale, block_k=block_k,
+                        interpret=interpret)

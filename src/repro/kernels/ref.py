@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_ref(q, k, v, *, scale: float, causal: bool = True,
+              q_offset: int = 0):
+    """q: (b, hq, sq, dq), k: (b, hkv, skv, dq), v: (b, hkv, skv, dv).
+    GQA: hq % hkv == 0. Returns (b, hq, sq, dv)."""
+    b, hq, sq, dq = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    kr = jnp.repeat(k, n_rep, axis=1)
+    vr = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * scale
+    if causal:
+        q_pos = jnp.arange(sq)[:, None] + q_offset
+        k_pos = jnp.arange(skv)[None, :]
+        s = jnp.where((k_pos <= q_pos)[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vr.dtype), vr)
+
+
+def decode_ref(q, k, v, kv_len, *, scale: float):
+    """Single-step decode. q: (b, hq, dq); k: (b, hkv, M, dq);
+    v: (b, hkv, M, dv); kv_len: () or (b,) valid prefix length.
+    Returns (b, hq, dv)."""
+    b, hq, dq = q.shape
+    hkv, M = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    kr = jnp.repeat(k, n_rep, axis=1)
+    vr = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q, kr).astype(jnp.float32) * scale
+    valid = jnp.arange(M)[None, None, :] < jnp.reshape(kv_len, (-1, 1, 1))
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p.astype(vr.dtype), vr)

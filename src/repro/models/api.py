@@ -1,0 +1,190 @@
+"""Unified model API: family-dispatched init / loss / decode / input_specs.
+
+Every assigned architecture runs through this interface; the launch layer
+(dryrun/train/serve) and the benchmarks never touch family modules directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+class ModelFns(NamedTuple):
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., Any]                    # (params, batch, **kw) -> (loss, aux)
+    init_cache: Callable[..., Any]              # (batch, max_len) -> cache
+    decode_step: Callable[..., Any]             # (params, cache, tokens) -> (logits, cache)
+    input_specs: Callable[[ShapeCell], Dict[str, Any]]
+
+
+def get_model(cfg: ModelConfig) -> ModelFns:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return _dense_fns(cfg)
+    if fam == "moe" and cfg.mla is not None:
+        return _deepseek_fns(cfg)
+    if fam == "moe":
+        return _dense_fns(cfg)                   # granite: dense attn + moe ffn
+    if fam == "hybrid":
+        return _zamba_fns(cfg)
+    if fam == "rwkv":
+        return _rwkv_fns(cfg)
+    if fam == "encdec":
+        return _encdec_fns(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+def _batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for a train/prefill batch."""
+    b, s = cell.global_batch, cell.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        # stubbed modality frontend: patch embeddings prepended; positions are
+        # the 3-stream M-RoPE ids
+        n_patch = cfg.frontend_positions
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, n_patch, cfg.d_model), nn.dt(cfg.dtype))
+        specs["positions"] = jax.ShapeDtypeStruct((b, 3, s + n_patch), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s + n_patch), jnp.int32)
+    if cfg.family == "encdec":
+        src = cfg.frontend_positions or s
+        specs["frames"] = jax.ShapeDtypeStruct((b, src, cfg.d_model),
+                                               nn.dt(cfg.dtype))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+
+def _dense_fns(cfg: ModelConfig) -> ModelFns:
+    from repro.models import transformer as tr
+
+    def loss(params, batch, **kw):
+        extra = batch.get("patch_embeds")
+        return tr.loss_dense(cfg, params, batch,
+                             positions=batch.get("positions"),
+                             extra_embeddings=extra, **kw)
+
+    def input_specs(cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"batch": _batch_specs(cfg, cell)}
+        b = cell.global_batch
+        cache = jax.eval_shape(lambda: tr.init_cache_dense(cfg, b, cell.seq_len))
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return ModelFns(
+        init=lambda rng: tr.init_dense(cfg, rng),
+        loss=loss,
+        init_cache=lambda b, m: tr.init_cache_dense(cfg, b, m),
+        decode_step=lambda params, cache, tokens, **kw:
+            tr.decode_step_dense(cfg, params, cache, tokens, **kw),
+        input_specs=input_specs,
+    )
+
+
+def _deepseek_fns(cfg: ModelConfig) -> ModelFns:
+    from repro.models import deepseek_v3 as ds
+
+    def input_specs(cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"batch": _batch_specs(cfg, cell)}
+        b = cell.global_batch
+        cache = jax.eval_shape(lambda: ds.init_cache_deepseek(cfg, b, cell.seq_len))
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return ModelFns(
+        init=lambda rng: ds.init_deepseek(cfg, rng),
+        loss=lambda params, batch, **kw: ds.loss_deepseek(cfg, params, batch, **kw),
+        init_cache=lambda b, m: ds.init_cache_deepseek(cfg, b, m),
+        decode_step=lambda params, cache, tokens, **kw:
+            ds.decode_step_deepseek(cfg, params, cache, tokens, **kw),
+        input_specs=input_specs,
+    )
+
+
+def _zamba_fns(cfg: ModelConfig) -> ModelFns:
+    from repro.models import zamba2 as zb
+
+    def decode_step(params, cache, tokens, **kw):
+        logits, aux = zb.forward_zamba(cfg, params, tokens, cache=cache, **kw)
+        return logits, aux["cache"]
+
+    def input_specs(cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"batch": _batch_specs(cfg, cell)}
+        b = cell.global_batch
+        cache = jax.eval_shape(lambda: zb.init_cache_zamba(cfg, b, cell.seq_len))
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return ModelFns(
+        init=lambda rng: zb.init_zamba(cfg, rng),
+        loss=lambda params, batch, **kw: zb.loss_zamba(cfg, params, batch, **kw),
+        init_cache=lambda b, m: zb.init_cache_zamba(cfg, b, m),
+        decode_step=decode_step,
+        input_specs=input_specs,
+    )
+
+
+def _rwkv_fns(cfg: ModelConfig) -> ModelFns:
+    from repro.models import rwkv_lm as rk
+
+    def input_specs(cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"batch": _batch_specs(cfg, cell)}
+        b = cell.global_batch
+        cache = jax.eval_shape(lambda: rk.init_cache_rwkv(cfg, b))
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return ModelFns(
+        init=lambda rng: rk.init_rwkv_lm(cfg, rng),
+        loss=lambda params, batch, **kw: rk.loss_rwkv(cfg, params, batch, **kw),
+        init_cache=lambda b, m: rk.init_cache_rwkv(cfg, b),
+        decode_step=lambda params, cache, tokens, **kw:
+            rk.decode_step_rwkv(cfg, params, cache, tokens),
+        input_specs=input_specs,
+    )
+
+
+def _encdec_fns(cfg: ModelConfig) -> ModelFns:
+    from repro.models import encdec as ed
+
+    def input_specs(cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"batch": _batch_specs(cfg, cell)}
+        b = cell.global_batch
+        src = cfg.frontend_positions or 1024
+        cache = jax.eval_shape(
+            lambda: ed.init_cache_encdec(cfg, b, cell.seq_len, src))
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return ModelFns(
+        init=lambda rng: ed.init_encdec(cfg, rng),
+        loss=lambda params, batch, **kw: ed.loss_encdec(cfg, params, batch, **kw),
+        init_cache=lambda b, m: ed.init_cache_encdec(
+            cfg, b, m, cfg.frontend_positions or 1024),
+        decode_step=lambda params, cache, tokens, **kw:
+            ed.decode_step_encdec(cfg, params, cache, tokens),
+        input_specs=input_specs,
+    )

@@ -1,0 +1,191 @@
+"""DeepSeek-V3 family: MLA attention, 1 shared + 256 routed experts (top-8),
+first 3 layers dense, multi-token prediction (MTP) head.
+
+Layout: the 3 dense-bottom layers are unrolled (heterogeneous params); the
+58 MoE layers run under scan with stacked params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.mla import init_mla, init_mla_cache, mla_decode, mla_train
+from repro.models.transformer import init_ffn
+
+
+def _init_block(cfg: ModelConfig, rng, dtype, dense: bool):
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "attn": init_mla(cfg, k1, dtype),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if dense:
+        p["ffn"] = init_ffn(cfg, k2, dtype, d_ff=cfg.dense_d_ff or cfg.d_ff)
+    else:
+        p["moe"] = moe_mod.init_moe(cfg, k2, dtype)
+    return p
+
+
+def init_deepseek(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dtype = nn.dt(cfg.param_dtype)
+    n_dense = cfg.first_dense_layers
+    n_moe = cfg.num_layers - n_dense
+    k_emb, k_dense, k_moe, k_head, k_mtp = jax.random.split(rng, 5)
+    params: Dict[str, Any] = {
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "dense_layers": [_init_block(cfg, k, dtype, True)
+                         for k in jax.random.split(k_dense, max(n_dense, 1))][:n_dense],
+        "moe_layers": jax.vmap(lambda k: _init_block(cfg, k, dtype, False))(
+            jax.random.split(k_moe, n_moe)),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": nn.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    if cfg.mtp_depth > 0:
+        km1, km2 = jax.random.split(k_mtp)
+        params["mtp"] = {
+            "proj": nn.dense_init(km1, 2 * cfg.d_model, cfg.d_model, dtype),
+            "block": _init_block(cfg, km2, dtype, False),
+            "ln_h": jnp.ones((cfg.d_model,), dtype),
+            "ln_e": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def _block(cfg: ModelConfig, lp, x, positions, rank_ctx, chunked):
+    h, aux = mla_train(cfg, lp["attn"], nn.rms_norm(x, lp["ln1"], cfg.rms_eps),
+                       positions, rank_ctx=rank_ctx, chunked=chunked)
+    x = x + h
+    xin = nn.rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if "moe" in lp:
+        f, moe_aux = moe_mod.moe_ffn(cfg, lp["moe"], xin)
+        aux = {**aux, **moe_aux}
+    else:
+        f = nn.swiglu(xin, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                      lp["ffn"]["w_down"])
+    return x + f, aux
+
+
+def forward_deepseek(cfg: ModelConfig, params, tokens, *, positions=None,
+                     rank_ctx0=None, collect_aux: str = "none",
+                     chunked: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    aux_losses = []
+    for lp in params["dense_layers"]:
+        x, aux = _block(cfg, lp, x, positions, rank_ctx0, chunked)
+
+    def body(carry, lp):
+        x = carry
+        x, aux = _block(cfg, lp, x, positions, rank_ctx0, chunked)
+        return x, aux.get("aux_loss", jnp.zeros((), jnp.float32))
+
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(
+            body, policy=(jax.checkpoint_policies.checkpoint_dots
+                          if cfg.remat == "dots" else None))
+    from repro.models.common import scan_or_unroll
+    x, moe_aux = scan_or_unroll(body_fn, x, params["moe_layers"],
+                                unroll=not cfg.scan_layers)
+    h_final = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h_final,
+                        params["lm_head"].astype(x.dtype))
+    aux_out: Dict[str, Any] = {"aux_loss": jnp.sum(moe_aux)}
+
+    if cfg.mtp_depth > 0 and "mtp" in params:
+        # MTP depth 1: predict token t+2 from [h_t ; emb(token_{t+1})]
+        mtp = params["mtp"]
+        emb_next = params["embed"][tokens[:, 1:]].astype(dtype)   # (b, s-1, d)
+        h_in = jnp.concatenate(
+            [nn.rms_norm(x[:, :-1], mtp["ln_h"], cfg.rms_eps),
+             nn.rms_norm(emb_next, mtp["ln_e"], cfg.rms_eps)], axis=-1)
+        h_mtp = nn.linear(h_in, mtp["proj"])
+        h_mtp, mtp_aux = _block(cfg, mtp["block"], h_mtp, positions[:, :-1],
+                                rank_ctx0, chunked)
+        mtp_logits = jnp.einsum("bsd,dv->bsv",
+                                nn.rms_norm(h_mtp, params["ln_f"], cfg.rms_eps),
+                                params["lm_head"].astype(x.dtype))
+        aux_out["mtp_logits"] = mtp_logits
+        aux_out["aux_loss"] = aux_out["aux_loss"] + mtp_aux.get(
+            "aux_loss", jnp.zeros(()))
+    return logits, aux_out
+
+
+def loss_deepseek(cfg: ModelConfig, params, batch, *, mtp_weight: float = 0.3,
+                  **kw):
+    from repro.dist.ctx import logits_spec
+    spec = logits_spec(cfg)
+    logits, aux = forward_deepseek(cfg, params, batch["tokens"], **kw)
+    loss = nn.softmax_cross_entropy(logits, batch["labels"],
+                                    batch.get("mask"), spec=spec)
+    if "mtp_logits" in aux:
+        # labels for t+2 prediction: shift labels by one more step
+        mtp_labels = batch["labels"][:, 1:]
+        loss = loss + mtp_weight * nn.softmax_cross_entropy(
+            aux["mtp_logits"], mtp_labels, spec=spec)
+    return loss + aux["aux_loss"], aux
+
+
+def init_cache_deepseek(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = nn.dt(cfg.dtype)
+    cache = init_mla_cache(cfg, batch, max_len, cfg.num_layers, dtype)
+    return cache
+
+
+def decode_step_deepseek(cfg: ModelConfig, params, cache, tokens, *,
+                         positions=None):
+    """One decode step with the absorbed-MLA latent cache.
+
+    cache ckv/krope are stacked (L, b, M, ...); dense-bottom layers use
+    slices [0:n_dense], MoE layers the rest (scanned)."""
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(cache["len"] + jnp.arange(s)[None], (b, s))
+    n_dense = cfg.first_dense_layers
+
+    new_ckv, new_krope = [], []
+    for li, lp in enumerate(params["dense_layers"]):
+        lc = {"ckv": cache["ckv"][li], "krope": cache["krope"][li],
+              "len": cache["len"]}
+        h, nc = mla_decode(cfg, lp["attn"],
+                           nn.rms_norm(x, lp["ln1"], cfg.rms_eps), positions, lc)
+        x = x + h
+        xin = nn.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + nn.swiglu(xin, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                          lp["ffn"]["w_down"])
+        new_ckv.append(nc["ckv"])
+        new_krope.append(nc["krope"])
+
+    def body(carry, xs):
+        x = carry
+        lp, ckv_l, krope_l = xs
+        lc = {"ckv": ckv_l, "krope": krope_l, "len": cache["len"]}
+        h, nc = mla_decode(cfg, lp["attn"],
+                           nn.rms_norm(x, lp["ln1"], cfg.rms_eps), positions, lc)
+        x = x + h
+        f, _ = moe_mod.moe_ffn(cfg, lp["moe"],
+                               nn.rms_norm(x, lp["ln2"], cfg.rms_eps))
+        return x + f, (nc["ckv"], nc["krope"])
+
+    from repro.models.common import scan_or_unroll
+    x, (moe_ckv, moe_krope) = scan_or_unroll(
+        body, x, (params["moe_layers"], cache["ckv"][n_dense:],
+                  cache["krope"][n_dense:]), unroll=not cfg.scan_layers)
+    x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    ckv = (jnp.concatenate([jnp.stack(new_ckv), moe_ckv]) if new_ckv else moe_ckv)
+    krope = (jnp.concatenate([jnp.stack(new_krope), moe_krope])
+             if new_krope else moe_krope)
+    return logits, {"ckv": ckv, "krope": krope, "len": cache["len"] + s}

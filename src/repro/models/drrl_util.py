@@ -1,0 +1,13 @@
+"""Thin indirection over repro.core.drrl used by model modules (avoids
+import cycles between models and the RL controller)."""
+from __future__ import annotations
+
+from repro.core.drrl import conv_features, weight_stats
+
+
+def conv_feats(x, policy_params):
+    return conv_features(x, policy_params["conv"])
+
+
+def wstats(p_attn, power_iters: int = 3):
+    return weight_stats(p_attn, power_iters)

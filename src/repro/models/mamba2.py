@@ -1,0 +1,199 @@
+"""Mamba2 (SSD) blocks — chunked, matmul-dominant formulation (TPU-friendly).
+
+The chunked algorithm splits the sequence into chunks of Q tokens; the
+intra-chunk term is a (Q x Q) decay-masked attention-like matmul and the
+inter-chunk term is a tiny recurrent state pass (scan over chunks) — exactly
+the structure the MXU wants. A naive O(L) recurrence lives in ssd_naive()
+as the test oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+
+
+def init_mamba_block(cfg: ModelConfig, rng, dtype) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    conv_dim = d_in + 2 * G * N
+    ks = nn.split_keys(rng, 4)
+    return {
+        "in_proj": nn.dense_init(ks[0], d, 2 * d_in + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), dtype),
+        "out_proj": nn.dense_init(ks[2], d_in, d, dtype),
+        "ln": jnp.ones((d,), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (b, l, c), w: (k, c). Returns (y, new_state)
+    where state carries the last k-1 inputs for decoding."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return y + b.astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD: y[t] = C_t^T ( sum_{s<=t} prod_{u=s+1..t} exp(dtA_u) dt_s B_s x_s^T ).
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,) negative; B, C: (b, l, g, n).
+    Returns (y (b, l, h, p), final_state (b, h, n, p))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)               # (b, nc, q, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dta = dtc * A[None, None, None, :]             # (b, nc, q, h) negative
+    a_cs = jnp.cumsum(dta, axis=2)                 # inclusive cumsum
+    a_last = a_cs[:, :, -1:]                       # (b, nc, 1, h)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    li = a_cs[:, :, :, None, :]                    # i index
+    lj = a_cs[:, :, None, :, :]                    # j index
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the (positive) upper-triangle would overflow
+    # and poison gradients through the where (inf * 0 -> NaN in the VJP)
+    decay = jnp.exp(jnp.where(mask, li - lj, -jnp.inf))
+    decay = jnp.where(mask, decay, 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))
+    w = scores * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    sdecay = jnp.exp(a_last - a_cs)                # (b, nc, q, h)
+    s_chunk = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                         sdecay * dtc, Bh.astype(jnp.float32),
+                         xc.astype(jnp.float32))
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(a_last[:, :, 0])         # (b, nc, h)
+
+    def body(S, xs):
+        s_c, dec = xs                              # (b, h, n, p), (b, h)
+        y_state = S                                 # state entering this chunk
+        S = S * dec[:, :, None, None] + s_c
+        return S, y_state
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    S_final, S_in = jax.lax.scan(
+        body, S0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)                # (b, nc, h, n, p)
+
+    in_decay = jnp.exp(a_cs)                       # (b, nc, q, h)
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                         Ch.astype(jnp.float32), S_in, in_decay)
+    y = (y_intra + y_inter).reshape(b, L, h, p)[:, :l]
+    return y.astype(x.dtype), S_final
+
+
+def ssd_naive(x, dt, A, B, C):
+    """O(L) recurrence oracle (tests only)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def body(S, xs):
+        xt, dtt, Bt, Ct = xs
+        dec = jnp.exp(dtt * A)[:, :, None, None]
+        S = S * dec + jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(body, S0,
+                         (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    z, xBC, dt = jnp.split(proj, [d_in, d_in + d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt, (d_in, H, G, N)
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, conv_state=None, ssm_state=None,
+                single_step: bool = False):
+    """x: (b, l, d) -> (y (b, l, d), new_conv_state, new_ssm_state)."""
+    s = cfg.ssm
+    res = x
+    x = nn.rms_norm(x, p["ln"], cfg.rms_eps)
+    proj = nn.linear(x, p["in_proj"])
+    z, xBC, dt, (d_in, H, G, N) = _split_proj(cfg, proj)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xc, B, C = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    b, l = x.shape[0], x.shape[1]
+    xh = xc.reshape(b, l, H, s.head_dim)
+    Bh = B.reshape(b, l, G, N)
+    Ch = C.reshape(b, l, G, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if single_step:
+        rep = H // G
+        Bt = jnp.repeat(Bh[:, 0], rep, axis=1).astype(jnp.float32)
+        Ct = jnp.repeat(Ch[:, 0], rep, axis=1).astype(jnp.float32)
+        dtt = dtv[:, 0]
+        dec = jnp.exp(dtt * A)[:, :, None, None]
+        S = ssm_state * dec + jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt,
+                                         xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, S)[:, None]
+        new_ssm = S
+    else:
+        y, new_ssm = ssd_chunked(xh, dtv, A, Bh, Ch, s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = nn.rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.rms_eps)
+    return res + nn.linear(y, p["out_proj"]), new_conv, new_ssm
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    conv_dim = d_in + 2 * G * N
+    return (jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+            jnp.zeros((batch, H, N, s.head_dim), jnp.float32))

@@ -1,0 +1,154 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with optional DR-RL composition.
+
+MLA is itself a *static* low-rank compression of the KV path (kv_lora_rank).
+DR-RL composes on top by dynamically truncating the score contraction of the
+assembled per-head q/k (dim qk_nope+qk_rope) — see DESIGN.md section 5.
+Decode uses the absorbed formulation: the cache holds only the (kv_lora +
+rope) latent per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.attention import (apply_rank_masked, attend, heuristic_rank,
+                                    spectral_ctx)
+from repro.models.common import apply_rope
+
+
+def init_mla(cfg: ModelConfig, rng, dtype) -> Dict[str, jnp.ndarray]:
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = nn.split_keys(rng, 5)
+    return {
+        "wq_a": nn.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": nn.dense_init(ks[1], m.q_lora_rank, h * qk, dtype),
+        "wkv_a": nn.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": nn.dense_init(ks[3], m.kv_lora_rank,
+                               h * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": nn.dense_init(ks[4], h * m.v_head_dim, d, dtype,
+                            scale=(h * m.v_head_dim) ** -0.5
+                            / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _project_q(cfg: ModelConfig, p, x, positions):
+    m, h = cfg.mla, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    b, s, _ = x.shape
+    q_lat = nn.rms_norm(nn.linear(x, p["wq_a"]), p["q_norm"], cfg.rms_eps)
+    q = nn.linear(q_lat, p["wq_b"]).reshape(b, s, h, qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train(cfg: ModelConfig, p, x, positions, *,
+              rank_ctx: Optional[Dict[str, Any]] = None,
+              chunked: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Training/prefill path (non-absorbed): materialise per-head k/v."""
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+
+    kv = nn.linear(x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = nn.rms_norm(c_kv, p["kv_norm"], cfg.rms_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    kvb = nn.linear(c_kv, p["wkv_b"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+                        axis=-1)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = qk ** -0.5
+    aux: Dict[str, Any] = {}
+    rcfg = rank_ctx["cfg"] if rank_ctx else None
+    if rcfg is not None and rcfg.mode != "off":
+        ctx = spectral_ctx(q, k)
+        aux["k_s2"] = ctx["k_s2"]
+        if rcfg.mode == "drrl":
+            rank_k, drrl_aux = rank_ctx["action_fn"](ctx, rank_ctx)
+            aux.update(drrl_aux)
+        else:
+            rank_k = heuristic_rank(rcfg, ctx, rank_ctx.get("rng"))
+        aux["rank"] = rank_k
+        q, k = apply_rank_masked(q, k, ctx, rank_k, rank_k)
+    score_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        cfg.softmax_dtype]
+    score_spec = None
+    if cfg.seq_shard_attn and cfg.mesh_axes:
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(a for a in cfg.mesh_axes if a != "model")
+        dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+        q = jax.lax.with_sharding_constraint(q, P(dp, "model", None, None))
+        score_spec = P(dp, None, "model", None)
+    o = attend(q, k, v, scale=scale, causal=True, chunked=chunked,
+               score_dtype=score_dtype, score_spec=score_spec)
+    out = jnp.einsum("bshf,hfd->bsd", o,
+                     p["wo"].reshape(h, m.v_head_dim, cfg.d_model).astype(x.dtype))
+    return out, aux
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                   dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((n_layers, batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_layers, batch, max_len, m.qk_rope_head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(cfg: ModelConfig, p, x, positions, layer_cache: dict
+               ) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed decode: scores and values computed against the latent cache.
+    layer_cache: {'ckv': (b, M, kv_lora), 'krope': (b, M, rope), 'len'}."""
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+
+    kv = nn.linear(x, p["wkv_a"])
+    c_kv_new, k_rope_new = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv_new = nn.rms_norm(c_kv_new, p["kv_norm"], cfg.rms_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+
+    idx = layer_cache["len"]
+    ckv = jax.lax.dynamic_update_slice(
+        layer_cache["ckv"], c_kv_new.astype(layer_cache["ckv"].dtype), (0, idx, 0))
+    krope = jax.lax.dynamic_update_slice(
+        layer_cache["krope"], k_rope_new.astype(layer_cache["krope"].dtype), (0, idx, 0))
+    kv_len = idx + s
+
+    # absorb W_uk into q: q_abs (b, s, h, kv_lora)
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_head_dim]          # (kv_lora, h, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]          # (kv_lora, h, v)
+    q_abs = jnp.einsum("bshn,chn->bshc", q_nope, w_uk.astype(x.dtype))
+
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = qk ** -0.5
+    scores = (jnp.einsum("bshc,bmc->bhsm", q_abs, ckv)
+              + jnp.einsum("bshr,bmr->bhsm", q_rope, krope)
+              ).astype(jnp.float32) * scale
+    q_pos = idx + jnp.arange(s)[:, None]
+    k_pos = jnp.arange(ckv.shape[1])[None, :]
+    mask = (k_pos <= q_pos) & (k_pos < kv_len)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhsm,bmc->bshc", probs, ckv)  # latent-space output
+    o = jnp.einsum("bshc,chv->bshv", o_c, w_uv.astype(x.dtype))
+    out = jnp.einsum("bshv,hvd->bsd", o,
+                     p["wo"].reshape(h, m.v_head_dim, cfg.d_model).astype(x.dtype))
+    return out, {"ckv": ckv, "krope": krope, "len": kv_len}

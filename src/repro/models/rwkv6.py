@@ -1,0 +1,185 @@
+"""RWKV6 'Finch' — attention-free time-mix with data-dependent decay.
+
+DR-RL is inapplicable here (no QK^T score matrix exists) — see DESIGN.md
+section Arch-applicability. The sequence mixer is the wkv6 recurrence
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T,      y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+computed in a chunked matmul form for TPU (naive scan oracle in wkv6_naive).
+Token-shift mixing and the decay LoRA follow the Finch design.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+
+
+def init_rwkv_block(cfg: ModelConfig, rng, dtype) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    r = cfg.rwkv.decay_lora
+    ks = nn.split_keys(rng, 12)
+    return {
+        "ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+        # token-shift interpolation weights for (r, k, v, w, g)
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32) * 0.5).astype(dtype),
+        "wr": nn.dense_init(ks[1], d, d, dtype),
+        "wk": nn.dense_init(ks[2], d, d, dtype),
+        "wv": nn.dense_init(ks[3], d, d, dtype),
+        "wg": nn.dense_init(ks[4], d, d, dtype),
+        "wo": nn.dense_init(ks[5], d, d, dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wA": nn.dense_init(ks[6], d, r, dtype),
+        "wB": nn.dense_init(ks[7], r, d, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[8], (d,), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel-mix
+        "mu_c": (jax.random.uniform(ks[9], (2, d), jnp.float32) * 0.5).astype(dtype),
+        "ck": nn.dense_init(ks[10], d, cfg.d_ff, dtype),
+        "cv": nn.dense_init(ks[11], cfg.d_ff, d, dtype),
+        "cr": nn.dense_init(jax.random.fold_in(ks[11], 1), d, d, dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """shift right by one; `last` (b, 1, d) supplies the boundary token."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r, k, v, w_log, u, head_dim: int, chunk: int,
+                 state0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v: (b, l, d); w_log: (b, l, d) = log w_t in (-inf, 0); u: (d,).
+    Multi-head with dk = dv = head_dim. Returns (y (b, l, d), final state)."""
+    b, l, d = r.shape
+    hd = head_dim
+    h = d // hd
+    pad = (-l) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        r, k, v, w_log = z(r), z(k), z(v), z(w_log)
+    L = r.shape[1]
+    nc = L // chunk
+    shp = (b, nc, chunk, h, hd)
+    rc = r.reshape(shp).astype(jnp.float32)
+    kc = k.reshape(shp).astype(jnp.float32)
+    vc = v.reshape(shp).astype(jnp.float32)
+    wc = w_log.reshape(shp).astype(jnp.float32)
+    uu = u.reshape(h, hd)
+
+    # cumulative log-decay, exclusive of position i itself: the decay applied
+    # between source j and target i (j < i) is sum_{m=j+1..i-1} logw ... the
+    # recurrence applies w at each step *before* adding k_t v_t, so the factor
+    # from j to i is prod_{m=j+1..i} w_m for the S-part read at time i+1; with
+    # the RWKV convention y_t reads S_{t-1}: factor = prod_{m=j+1..t-1} w_m.
+    cw = jnp.cumsum(wc, axis=2)                    # inclusive cumsum of logs
+    # decay(i<-j) for j<i: exp(cw[i-1] - cw[j])
+    cwi = jnp.concatenate([jnp.zeros_like(cw[:, :, :1]), cw[:, :, :-1]], axis=2)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)[None, None, :, :,
+                                                          None, None]
+    # mask BEFORE exp (see mamba2.ssd_chunked): avoids inf*0 NaN gradients
+    delta = jnp.where(mask, cwi[:, :, :, None, :, :]
+                      - cw[:, :, None, :, :, :], -jnp.inf)
+    dec = jnp.where(mask, jnp.exp(delta), 0.0)     # (b, nc, qi, qj, h, hd)
+    scores = jnp.einsum("bcihd,bcijhd,bcjhd->bcijh", rc, dec, kc)
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", scores, vc)
+    # diagonal u-term: y_t += (r_t . (u*k_t)) v_t
+    diag = jnp.einsum("bcihd,hd,bcihd->bcih", rc, uu, kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # chunk state: S_chunk = sum_j diag(prod_{m=j+1..Q} w) k_j v_j^T
+    sdec = jnp.exp(cw[:, :, -1:, :, :] - cw)       # (b, nc, q, h, hd)
+    s_chunk = jnp.einsum("bcjhd,bcjhe->bchde", kc * sdec, vc)
+    chunk_dec = jnp.exp(cw[:, :, -1])              # (b, nc, h, hd)
+
+    def body(S, xs):
+        s_c, dec_c = xs
+        S_in = S
+        S = S * dec_c[..., None] + s_c
+        return S, S_in
+
+    S0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    S_fin, S_in = jax.lax.scan(
+        body, S0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_dec, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)                # (b, nc, h, dk, dv)
+    y_inter = jnp.einsum("bcihd,bchde->bcihe", rc * jnp.exp(cwi), S_in)
+    y = (y_intra + y_inter).reshape(b, L, d)[:, :l]
+    return y, S_fin
+
+
+def wkv6_naive(r, k, v, w_log, u, head_dim: int, state0=None):
+    """Step-by-step oracle."""
+    b, l, d = r.shape
+    h, hd = d // head_dim, head_dim
+    rr = r.reshape(b, l, h, hd).astype(jnp.float32)
+    kk = k.reshape(b, l, h, hd).astype(jnp.float32)
+    vv = v.reshape(b, l, h, hd).astype(jnp.float32)
+    ww = jnp.exp(w_log.reshape(b, l, h, hd).astype(jnp.float32))
+    uu = u.reshape(h, hd)
+
+    def body(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S + uu[None, :, :, None] * kv)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    S0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    S, ys = jax.lax.scan(body, S0, tuple(
+        jnp.moveaxis(t, 1, 0) for t in (rr, kk, vv, ww)))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, l, d), S
+
+
+def rwkv_block(cfg: ModelConfig, p, x, *, state=None, single_step=False):
+    """x: (b, l, d). state: (shift1, wkv_state, shift2) or None.
+    Returns (y, new_state)."""
+    rw = cfg.rwkv
+    b, l, d = x.shape
+    s1 = state[0] if state is not None else None
+    S0 = state[1] if state is not None else None
+    s2 = state[2] if state is not None else None
+
+    h = nn.rms_norm(x, p["ln1"], cfg.rms_eps)
+    hs = _token_shift(h, s1)
+    mu = p["mu"].astype(h.dtype)
+    mix = lambda i: h * (1 - mu[i]) + hs * mu[i]
+    r = nn.linear(mix(0), p["wr"])
+    k = nn.linear(mix(1), p["wk"])
+    v = nn.linear(mix(2), p["wv"])
+    g = nn.linear(mix(4), p["wg"])
+    w_log = -jnp.exp(p["w0"] + nn.linear(
+        jnp.tanh(nn.linear(mix(3), p["wA"])), p["wB"]).astype(jnp.float32))
+    w_log = jnp.clip(w_log, -8.0, -1e-4)
+
+    if single_step:
+        y, S = wkv6_naive(r, k, v, w_log, p["u"], rw.head_dim, S0)
+    else:
+        y, S = wkv6_chunked(r, k, v, w_log, p["u"], rw.head_dim,
+                            rw.chunk_size, S0)
+    y = nn.rms_norm(y.astype(x.dtype), p["ln_x"], cfg.rms_eps)
+    x = x + nn.linear(y * jax.nn.silu(g), p["wo"])
+
+    # channel mix
+    h2 = nn.rms_norm(x, p["ln2"], cfg.rms_eps)
+    h2s = _token_shift(h2, s2)
+    mc = p["mu_c"].astype(h2.dtype)
+    mixc = lambda i: h2 * (1 - mc[i]) + h2s * mc[i]
+    kk = jnp.square(jax.nn.relu(nn.linear(mixc(0), p["ck"])))
+    x = x + jax.nn.sigmoid(nn.linear(mixc(1), p["cr"])) * nn.linear(kk, p["cv"])
+    new_state = (h[:, -1:], S, h2[:, -1:])
+    return x, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    return (jnp.zeros((batch, 1, d), dtype),
+            jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, 1, d), dtype))

@@ -1,0 +1,68 @@
+"""RWKV6 language model: stacked Finch blocks under scan."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.common import scan_or_unroll
+from repro.models.rwkv6 import init_rwkv_block, init_rwkv_state, rwkv_block
+
+
+def init_rwkv_lm(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dtype = nn.dt(cfg.param_dtype)
+    k_emb, k_l, k_h = jax.random.split(rng, 3)
+    return {
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: init_rwkv_block(cfg, k, dtype))(
+            jax.random.split(k_l, cfg.num_layers)),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": nn.dense_init(k_h, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def forward_rwkv(cfg: ModelConfig, params, tokens, *, state=None,
+                 single_step=False, **_ignored):
+    """state: stacked per-layer (shift1, S, shift2) or None (training)."""
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+
+    def body(x, xs):
+        lp, st = xs
+        x, new_st = rwkv_block(cfg, lp, x, state=st, single_step=single_step)
+        return x, new_st
+
+    if state is None:
+        b = tokens.shape[0]
+        s0 = init_rwkv_state(cfg, b, dtype)
+        state = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), s0)
+    x, new_state = scan_or_unroll(body, x, (params["layers"], state),
+                                  unroll=not cfg.scan_layers)
+    x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, new_state
+
+
+def loss_rwkv(cfg: ModelConfig, params, batch, **kw):
+    from repro.dist.ctx import logits_spec
+    logits, _ = forward_rwkv(cfg, params, batch["tokens"])
+    return nn.softmax_cross_entropy(logits, batch["labels"],
+                                    batch.get("mask"),
+                                    spec=logits_spec(cfg)), {}
+
+
+def init_cache_rwkv(cfg: ModelConfig, batch: int) -> Any:
+    dtype = nn.dt(cfg.dtype)
+    s0 = init_rwkv_state(cfg, batch, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), s0)
+
+
+def decode_step_rwkv(cfg: ModelConfig, params, cache, tokens):
+    logits, new_state = forward_rwkv(cfg, params, tokens, state=cache,
+                                     single_step=tokens.shape[1] == 1)
+    return logits, new_state

@@ -1,0 +1,283 @@
+"""Dense decoder-only transformer family (llama/qwen/internlm/phi3 style),
+plus the Qwen2-VL backbone (M-RoPE) — scan-over-layers with stacked params.
+
+Also hosts the generic FFN/MoE block dispatch used by the MoE family.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.core import drrl
+from repro.models import moe as moe_mod
+from repro.models.attention import mhsa
+from repro.models.common import make_kv_cache
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, rng, dtype) -> Dict[str, jnp.ndarray]:
+    d, dh = cfg.d_model, cfg.resolved_head_dim()
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = nn.split_keys(rng, 4)
+    p = {
+        "wq": nn.dense_init(ks[0], d, hq * dh, dtype),
+        "wk": nn.dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": nn.dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": nn.dense_init(ks[3], hq * dh, d, dtype,
+                            scale=(hq * dh) ** -0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def init_ffn(cfg: ModelConfig, rng, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = nn.split_keys(rng, 3)
+    return {
+        "w_gate": nn.dense_init(ks[0], d, f, dtype),
+        "w_up": nn.dense_init(ks[1], d, f, dtype),
+        "w_down": nn.dense_init(ks[2], f, d, dtype,
+                                scale=f ** -0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def init_layer(cfg: ModelConfig, rng, dtype) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "attn": init_attn(cfg, k1, dtype),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe" and cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(cfg, k2, dtype)
+    else:
+        p["ffn"] = init_ffn(cfg, k2, dtype)
+    return p
+
+
+def init_dense(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dtype = nn.dt(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    # always stacked: scan consumes them directly; the unrolled path
+    # (scan_layers=False, used by the roofline calibration) slices per layer
+    layers = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    params = {
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, lp, x, positions, rank_ctx, cache, chunked):
+    h, new_cache, aux = mhsa(cfg, lp["attn"], nn.rms_norm(x, lp["ln1"], cfg.rms_eps),
+                             positions, rank_ctx=rank_ctx, cache=cache,
+                             chunked=chunked)
+    x = x + h
+    if cfg.family == "moe" and cfg.moe is not None and "moe" in lp:
+        f, moe_aux = moe_mod.moe_ffn(cfg, lp["moe"], nn.rms_norm(x, lp["ln2"], cfg.rms_eps))
+        aux = {**aux, **moe_aux}
+    else:
+        f = nn.swiglu(nn.rms_norm(x, lp["ln2"], cfg.rms_eps),
+                      lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+    return x + f, new_cache, aux
+
+
+def _aux_slim(aux: Dict[str, Any], collect: str) -> Dict[str, Any]:
+    """Select which per-layer aux to stack through scan.
+    collect: 'none' | 'ranks' | 'rl' (everything PPO needs)."""
+    if collect == "none":
+        return {}
+    keep = {"rank", "delta_a_rel", "fidelity", "aux_loss"}
+    if collect == "rl":
+        keep |= {"action_idx", "logp", "value", "action_mask", "features",
+                 "logits", "delta_a_grid", "delta_a_norm", "k_s2", "qkv"}
+    return {k: v for k, v in aux.items() if k in keep}
+
+
+def make_rank_ctx(cfg: ModelConfig, *, policy_params=None, rng=None, t=0,
+                  greedy=True, compute_fidelity=False, h_t=None,
+                  collect_qkv=False):
+    """Build the per-forward rank context (None when mode == 'off')."""
+    rcfg = cfg.rank
+    if rcfg.mode == "off":
+        return None
+    ctx: Dict[str, Any] = {"cfg": rcfg, "rng": rng, "t": t,
+                           "compute_fidelity": compute_fidelity,
+                           "collect_qkv": collect_qkv}
+    if rcfg.mode == "performer":
+        from repro.core.baselines import orthogonal_proj
+        dh = cfg.resolved_head_dim()
+        m = max(2 * dh, 4 * rcfg.fixed_rank)
+        ctx["proj"] = orthogonal_proj(jax.random.PRNGKey(42), cfg.num_heads,
+                                      m, dh)
+    if rcfg.mode == "drrl":
+        assert policy_params is not None, "drrl mode needs policy params"
+        if h_t is None:
+            raise ValueError("drrl mode: pass h_t (conv features) via forward")
+        ctx["action_fn"] = drrl.make_action_fn(policy_params, rcfg,
+                                               h_t=h_t, greedy=greedy)
+    return ctx
+
+
+def forward_dense(cfg: ModelConfig, params, tokens, *, positions=None,
+                  policy_params=None, rank_rng=None, rl_t=0, greedy=True,
+                  compute_fidelity=False, collect_aux: str = "none",
+                  chunked: bool = False, collect_qkv: bool = False,
+                  return_hidden: bool = False,
+                  extra_embeddings: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tokens: (b, s) int32 (or (b, s_txt) with extra_embeddings prepended for
+    the VLM/audio stub). Returns (logits (b, s, V), aux)."""
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if extra_embeddings is not None:
+        x = jnp.concatenate([extra_embeddings.astype(dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        positions = jnp.broadcast_to(pos[:, None], (b, 3, s)) if cfg.mrope else pos
+
+    rcfg = cfg.rank
+    h_t = None
+    if rcfg.mode == "drrl":
+        h_t = drrl.conv_features(x, policy_params["conv"])
+    rank_ctx0 = make_rank_ctx(cfg, policy_params=policy_params, rng=rank_rng,
+                              t=rl_t, greedy=greedy,
+                              compute_fidelity=compute_fidelity, h_t=h_t,
+                              collect_qkv=collect_qkv)
+
+    def body(carry, xs):
+        x, prev_rank, key = carry
+        lp, li = xs
+        rank_ctx = None
+        if rank_ctx0 is not None:
+            sub = None
+            if key is not None:
+                key, sub = jax.random.split(key)
+            rank_ctx = dict(rank_ctx0, prev_rank=prev_rank, layer_id=li,
+                            rng=sub,
+                            w_t=(drrl.weight_stats(lp["attn"], rcfg.power_iters)
+                                 if rcfg.mode == "drrl" else None))
+        x, _, aux = _block(cfg, lp, x, positions, rank_ctx, None, chunked)
+        new_prev = aux.get("rank", prev_rank)
+        return (x, new_prev, key), _aux_slim(aux, collect_aux)
+
+    prev0 = jnp.full((b, cfg.num_kv_heads), rcfg.rank_grid[-1], jnp.int32)
+    key0 = rank_rng
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(
+            body, policy=(jax.checkpoint_policies.checkpoint_dots
+                          if cfg.remat == "dots" else None))
+    from repro.models.common import scan_or_unroll
+    (x, _, _), aux_layers = scan_or_unroll(
+        body_fn, (x, prev0, key0),
+        (params["layers"], jnp.arange(cfg.num_layers)),
+        unroll=not cfg.scan_layers)
+    if aux_layers is None:
+        aux_layers = {}
+
+    x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    logits = (jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+              if head is not None else
+              jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype)))
+    out_aux: Dict[str, Any] = {"layers": aux_layers}
+    if return_hidden:
+        out_aux["hidden"] = x
+    return logits, out_aux
+
+
+def loss_dense(cfg: ModelConfig, params, batch, **kw):
+    from repro.dist.ctx import logits_spec
+    logits, aux = forward_dense(cfg, params, batch["tokens"], **kw)
+    n_txt = batch["labels"].shape[1]
+    logits = logits[:, -n_txt:]
+    loss = nn.softmax_cross_entropy(logits, batch["labels"],
+                                    batch.get("mask"),
+                                    spec=logits_spec(cfg))
+    if aux["layers"] and "aux_loss" in aux["layers"]:
+        loss = loss + jnp.mean(aux["layers"]["aux_loss"])
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV caches stacked over layers)
+# ---------------------------------------------------------------------------
+
+def init_cache_dense(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = nn.dt(cfg.dtype)
+    dh = cfg.resolved_head_dim()
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step_dense(cfg: ModelConfig, params, cache, tokens, *,
+                      positions=None, policy_params=None, rank_rng=None,
+                      rl_t=0, chunked: bool = False):
+    """One decode step: tokens (b, s_new) appended at cache['len'].
+    Returns (logits (b, s_new, V), new_cache)."""
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    b, s, _ = x.shape
+    if positions is None:
+        pos = cache["len"] + jnp.arange(s)[None]
+        pos = jnp.broadcast_to(pos, (b, s))
+        positions = jnp.broadcast_to(pos[:, None], (b, 3, s)) if cfg.mrope else pos
+
+    rcfg = cfg.rank
+    h_t = None
+    if rcfg.mode == "drrl" and policy_params is not None:
+        h_t = drrl.conv_features(x, policy_params["conv"])
+    rank_ctx0 = make_rank_ctx(cfg, policy_params=policy_params, rng=rank_rng,
+                              t=rl_t, greedy=True, h_t=h_t)
+
+    def body(carry, xs):
+        x, prev_rank = carry
+        lp, li, ck, cv = xs
+        layer_cache = {"k": ck, "v": cv, "len": cache["len"]}
+        rank_ctx = None
+        if rank_ctx0 is not None:
+            rank_ctx = dict(rank_ctx0, prev_rank=prev_rank, layer_id=li,
+                            w_t=(drrl.weight_stats(lp["attn"], rcfg.power_iters)
+                                 if rcfg.mode == "drrl" else None))
+        x, new_cache, aux = _block(cfg, lp, x, positions, rank_ctx,
+                                   layer_cache, chunked)
+        return (x, aux.get("rank", prev_rank)), (new_cache["k"], new_cache["v"])
+
+    prev0 = jnp.full((b, cfg.num_kv_heads), rcfg.rank_grid[-1], jnp.int32)
+    from repro.models.common import scan_or_unroll
+    (x, _), (nk, nv) = scan_or_unroll(
+        body, (x, prev0),
+        (params["layers"], jnp.arange(cfg.num_layers), cache["k"], cache["v"]),
+        unroll=not cfg.scan_layers)
+    x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    logits = (jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+              if head is not None else
+              jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype)))
+    return logits, {"k": nk, "v": nv, "len": cache["len"] + s}

@@ -1,0 +1,189 @@
+"""Zamba2 hybrid: Mamba2 backbone + a single *shared* attention block invoked
+periodically (every ``hybrid_period`` mamba blocks) with per-invocation LoRA
+adapters on its projections.
+
+DR-RL drives the rank of the shared attention block only (the mamba blocks
+are attention-free) — see DESIGN.md section 5. The '81L' layer count =
+54 mamba blocks + 27 shared-attention invocations (period 2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.attention import mhsa
+from repro.models.common import scan_or_unroll
+from repro.models.mamba2 import init_mamba_block, init_mamba_state, mamba_block
+from repro.models.transformer import init_attn, init_ffn, make_rank_ctx
+from repro.models import drrl_util
+
+
+def n_blocks(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_mamba, n_shared_invocations) with n_mamba + n_inv == num_layers."""
+    n_inv = cfg.num_layers // (cfg.hybrid_period + 1)
+    return cfg.num_layers - n_inv, n_inv
+
+
+def init_zamba(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dtype = nn.dt(cfg.param_dtype)
+    n_mamba, n_inv = n_blocks(cfg)
+    k_emb, k_m, k_s, k_l, k_h = jax.random.split(rng, 5)
+    lora_rank = 64
+    d, dh = cfg.d_model, cfg.resolved_head_dim()
+    hq = cfg.num_heads
+
+    def init_lora(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "a": nn.dense_init(k1, d, lora_rank, dtype),
+            "b": nn.dense_init(k2, lora_rank, hq * dh, dtype, scale=0.01),
+        }
+
+    return {
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": jax.vmap(lambda k: init_mamba_block(cfg, k, dtype))(
+            jax.random.split(k_m, n_mamba)),
+        "shared": {
+            "attn": init_attn(cfg, k_s, dtype),
+            "ffn": init_ffn(cfg, jax.random.fold_in(k_s, 1), dtype),
+            "ln1": jnp.ones((d,), dtype),
+            "ln2": jnp.ones((d,), dtype),
+        },
+        # per-invocation LoRA on the q projection (zamba2-style adapters)
+        "lora": jax.vmap(init_lora)(jax.random.split(k_l, n_inv)),
+        "ln_f": jnp.ones((d,), dtype),
+        "lm_head": nn.dense_init(k_h, d, cfg.vocab_size, dtype),
+    }
+
+
+def _shared_attn(cfg, shared, lora, x, positions, rank_ctx, cache, chunked):
+    """Shared block with this invocation's LoRA delta on wq."""
+    p = dict(shared["attn"])
+    p["wq"] = p["wq"] + jnp.einsum("dr,rf->df", lora["a"], lora["b"])
+    h, new_cache, aux = mhsa(cfg, p, nn.rms_norm(x, shared["ln1"], cfg.rms_eps),
+                             positions, rank_ctx=rank_ctx, cache=cache,
+                             chunked=chunked)
+    x = x + h
+    x = x + nn.swiglu(nn.rms_norm(x, shared["ln2"], cfg.rms_eps),
+                      shared["ffn"]["w_gate"], shared["ffn"]["w_up"],
+                      shared["ffn"]["w_down"])
+    return x, new_cache, aux
+
+
+def forward_zamba(cfg: ModelConfig, params, tokens, *, positions=None,
+                  policy_params=None, rank_rng=None, rl_t=0,
+                  collect_aux: str = "none", chunked: bool = False,
+                  cache: Optional[dict] = None):
+    """Groups of (period mamba blocks + 1 shared-attn invocation), scanned.
+    With ``cache`` set, runs a decode step (single/new tokens appended)."""
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    b, s, _ = x.shape
+    n_mamba, n_inv = n_blocks(cfg)
+    period = cfg.hybrid_period
+    decode = cache is not None
+    if positions is None:
+        off = cache["len"] if decode else 0
+        positions = jnp.broadcast_to(off + jnp.arange(s)[None], (b, s))
+
+    rcfg = cfg.rank
+    h_t = None
+    if rcfg.mode == "drrl" and policy_params is not None:
+        h_t = drrl_util.conv_feats(x, policy_params)
+    rank_ctx0 = make_rank_ctx(cfg, policy_params=policy_params, rng=rank_rng,
+                              t=rl_t, h_t=h_t)
+
+    # group the stacked mamba params: (n_inv, period, ...)
+    mamba_grouped = jax.tree_util.tree_map(
+        lambda a: a[:n_inv * period].reshape((n_inv, period) + a.shape[1:]),
+        params["mamba"])
+
+    def group_body(carry, xs):
+        x, prev_rank = carry
+        mg, lora, gi, conv_st, ssm_st, ck, cv = xs
+
+        def mamba_body(x, ms):
+            mp, cst, sst = ms
+            x, nc, ns = mamba_block(cfg, mp, x,
+                                    conv_state=cst if decode else None,
+                                    ssm_state=sst if decode else None,
+                                    single_step=decode and s == 1)
+            return x, (nc, ns)
+
+        x, (ncs, nss) = scan_or_unroll(mamba_body, x, (mg, conv_st, ssm_st),
+                                       unroll=not cfg.scan_layers)
+
+        rank_ctx = None
+        if rank_ctx0 is not None:
+            rank_ctx = dict(rank_ctx0, prev_rank=prev_rank, layer_id=gi,
+                            w_t=(drrl_util.wstats(params["shared"]["attn"],
+                                                  rcfg.power_iters)
+                                 if rcfg.mode == "drrl" else None))
+        layer_cache = {"k": ck, "v": cv, "len": cache["len"]} if decode else None
+        x, new_cache, aux = _shared_attn(cfg, params["shared"], lora, x,
+                                         positions, rank_ctx, layer_cache,
+                                         chunked)
+        new_prev = aux.get("rank", prev_rank)
+        ys = {"conv": ncs, "ssm": nss}
+        if decode:
+            ys["k"], ys["v"] = new_cache["k"], new_cache["v"]
+        if collect_aux != "none" and "rank" in aux:
+            ys["rank"] = aux["rank"]
+        return (x, new_prev), ys
+
+    if decode:
+        conv_st, ssm_st = cache["conv"], cache["ssm"]
+        ck, cv = cache["k"], cache["v"]
+    else:
+        c0, s0 = init_mamba_state(cfg, b, dtype)
+        conv_st = jnp.broadcast_to(c0[None], (n_mamba,) + c0.shape)
+        ssm_st = jnp.broadcast_to(s0[None], (n_mamba,) + s0.shape)
+        dh = cfg.resolved_head_dim()
+        ck = jnp.zeros((n_inv, b, 0, cfg.num_kv_heads, dh), dtype)
+        cv = jnp.zeros((n_inv, b, 0, cfg.num_kv_heads, dh), dtype)
+
+    conv_g = conv_st.reshape((n_inv, period) + conv_st.shape[1:])
+    ssm_g = ssm_st.reshape((n_inv, period) + ssm_st.shape[1:])
+    prev0 = jnp.full((b, cfg.num_kv_heads), rcfg.rank_grid[-1], jnp.int32)
+    (x, _), ys = scan_or_unroll(
+        group_body, (x, prev0),
+        (mamba_grouped, params["lora"], jnp.arange(n_inv), conv_g, ssm_g,
+         ck, cv), unroll=not cfg.scan_layers)
+
+    x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    new_cache = None
+    if decode:
+        new_cache = {
+            "conv": ys["conv"].reshape(conv_st.shape),
+            "ssm": ys["ssm"].reshape(ssm_st.shape),
+            "k": ys["k"], "v": ys["v"], "len": cache["len"] + s,
+        }
+    return logits, {"cache": new_cache,
+                    "ranks": ys.get("rank") if isinstance(ys, dict) else None}
+
+
+def init_cache_zamba(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = nn.dt(cfg.dtype)
+    n_mamba, n_inv = n_blocks(cfg)
+    c0, s0 = init_mamba_state(cfg, batch, dtype)
+    dh = cfg.resolved_head_dim()
+    return {
+        "conv": jnp.broadcast_to(c0[None], (n_mamba,) + c0.shape),
+        "ssm": jnp.broadcast_to(s0[None], (n_mamba,) + s0.shape),
+        "k": jnp.zeros((n_inv, batch, max_len, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((n_inv, batch, max_len, cfg.num_kv_heads, dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def loss_zamba(cfg: ModelConfig, params, batch, **kw):
+    from repro.dist.ctx import logits_spec
+    logits, _ = forward_zamba(cfg, params, batch["tokens"], **kw)
+    return nn.softmax_cross_entropy(logits, batch["labels"],
+                                    batch.get("mask"),
+                                    spec=logits_spec(cfg)), {}

@@ -1,0 +1,81 @@
+"""AdamW from scratch (no optax offline): decoupled weight decay, bias
+correction, global-norm clipping, schedule support. Optimizer state shares
+the param tree structure, so it inherits the exact param shardings (ZeRO-
+style sharded optimizer state falls out of FSDP param specs for free)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params),
+                      v=zeros(params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * factor, grads), g
+
+
+_WD_EXEMPT = ("ln", "norm", "bias", "b_", "bq", "bk", "bv", "A_log",
+              "dt_bias", "D", "mu", "w0", "u")
+
+
+def _decay_mask(path: str) -> bool:
+    last = path.split("/")[-1]
+    return not any(last.startswith(t) or last == t for t in _WD_EXEMPT) and \
+        not last.startswith("ln")
+
+
+def update(tc: TrainConfig, lr_fn: Callable, state: AdamWState, params, grads
+           ) -> Tuple[object, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_fn(step)
+    b1, b2, eps = tc.b1, tc.b2, tc.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pname = "/".join(str(getattr(k, "key", k)) for k in path)
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if _decay_mask(pname) and tc.weight_decay > 0:
+            upd = upd + tc.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unflatten = jax.tree_util.tree_unflatten
+    params = unflatten(treedef, [x for x in new_p])
+    m_tree = unflatten(treedef, new_m)
+    v_tree = unflatten(treedef, new_v)
+    return params, AdamWState(step=step, m=m_tree, v=v_tree), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,24 @@
+"""LR schedules (linear warmup + {linear, cosine, constant} decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def make_lr_fn(tc: TrainConfig):
+    peak, warm, total = tc.lr, tc.warmup_steps, tc.total_steps
+
+    def lr_fn(step):
+        s = step.astype(jnp.float32)
+        warmup = peak * s / jnp.maximum(warm, 1)
+        frac = jnp.clip((s - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        if tc.schedule == "cosine":
+            decay = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif tc.schedule == "linear":
+            decay = peak * (1.0 - frac)
+        else:
+            decay = jnp.asarray(peak)
+        return jnp.where(s < warm, warmup, decay)
+
+    return lr_fn

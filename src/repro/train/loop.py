@@ -1,0 +1,125 @@
+"""Training-step factory: grad accumulation, AdamW, metrics; mesh-aware.
+
+The same factory serves the CPU examples (1 device, dp) and the production
+dry-run (512 devices, fsdp_tp) — only the shardings differ.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.optim import adamw
+from repro.optim.schedules import make_lr_fn
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    loss_fn: Callable[..., Tuple[jnp.ndarray, Any]],
+                    grad_compression: Optional[str] = None):
+    """loss_fn(params, batch, rng) -> (loss, aux). Returns
+    train_step(params, opt_state, batch, rng) -> (params, opt_state, metrics)."""
+    lr_fn = make_lr_fn(tc)
+    compression = grad_compression or tc.grad_compression
+
+    def compute_grads(params, batch, rng):
+        def lf(p, b):
+            loss, _ = loss_fn(p, b, rng)
+            return loss
+
+        if tc.microbatches <= 1:
+            loss, grads = jax.value_and_grad(lf)(params, batch)
+            return loss, grads
+
+        k = tc.microbatches
+
+        def reshape(x):
+            return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            acc, err, loss_acc = carry
+            loss, grads = jax.value_and_grad(lf)(params, mb)
+            if compression == "bf16":
+                # error-feedback bf16 accumulation
+                new_acc, new_err = [], []
+                for a, e, g in zip(jax.tree_util.tree_leaves(acc),
+                                   jax.tree_util.tree_leaves(err),
+                                   jax.tree_util.tree_leaves(grads)):
+                    s = a.astype(jnp.float32) + g.astype(jnp.float32) + e
+                    c = s.astype(jnp.bfloat16)
+                    new_acc.append(c)
+                    new_err.append(s - c.astype(jnp.float32))
+                td = jax.tree_util.tree_structure(acc)
+                acc = jax.tree_util.tree_unflatten(td, new_acc)
+                err = jax.tree_util.tree_unflatten(td, new_err)
+            else:
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, err, loss_acc + loss), None
+
+        acc0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape,
+                                jnp.bfloat16 if compression == "bf16"
+                                else jnp.float32), params)
+        err0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, _, loss_sum), _ = jax.lax.scan(body, (acc0, err0, 0.0), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) / k,
+                                       grads)
+        return loss_sum / k, grads
+
+    def train_step(params, opt_state, batch, rng):
+        loss, grads = compute_grads(params, batch, rng)
+        params, opt_state, om = adamw.update(tc, lr_fn, opt_state, params,
+                                             grads)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def run_training(cfg: ModelConfig, tc: TrainConfig, *, init_fn, loss_fn,
+                 data, ckpt_manager=None, param_specs=None, hooks=(),
+                 straggler_warn_s: float = 60.0) -> Dict[str, Any]:
+    """Simple single-process driver with checkpoint/restart and per-step
+    timeout (straggler) logging. Returns final state + history."""
+    rng = jax.random.PRNGKey(tc.seed)
+    params = init_fn(rng)
+    opt_state = adamw.init(params)
+    start_step = 0
+    if ckpt_manager is not None:
+        latest = ckpt_manager.latest_step()
+        if latest is not None:
+            (params, opt_state), start_step, _ = ckpt_manager.load(
+                (params, opt_state), latest)
+            print(f"[ckpt] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, tc, loss_fn))
+    history = []
+    for step in range(start_step, tc.total_steps):
+        batch = data.batch_at(step)
+        t0 = time.monotonic()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jax.random.fold_in(rng, step))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.monotonic() - t0
+        if dt > straggler_warn_s:
+            print(f"[straggler] step {step} took {dt:.1f}s")
+        if step % tc.log_every == 0 or step == tc.total_steps - 1:
+            history.append({"step": step, **metrics, "s_per_step": dt})
+            print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                  f"lr {metrics['lr']:.2e} gnorm {metrics['grad_norm']:.2f} "
+                  f"({dt:.2f}s)")
+        for hook in hooks:
+            hook(step, params, metrics)
+        if ckpt_manager is not None and tc.checkpoint_every > 0 \
+                and (step + 1) % tc.checkpoint_every == 0:
+            ckpt_manager.save(step + 1, (params, opt_state), param_specs)
+    if ckpt_manager is not None:
+        ckpt_manager.wait()
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,125 @@
+"""Hybrid RL training pipeline (paper section 4.5.3):
+
+  stage 1 — Behaviour Cloning from the greedy oracle (exhaustive grid sweep
+            of the Eq. 13 reward per layer/head),
+  stage 2 — PPO fine-tuning with the Eq. 13 reward collected from live
+            rollouts (layer index = MDP time axis).
+
+Everything runs on the LM whose attention the agent controls; the LM params
+stay frozen during agent training (the paper adapts ranks at inference
+time) — joint fine-tuning is exercised separately in benchmarks/table1.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import ppo as ppo_mod
+from repro.core.oracle import oracle_actions
+from repro.core.rewards import reward
+from repro.models import transformer as tr
+from repro.optim import adamw
+from repro.optim.schedules import make_lr_fn
+
+
+def collect_rollout(cfg: ModelConfig, params, agent, batch, rng, t: int = 0
+                    ) -> Tuple[ppo_mod.Trajectory, Dict]:
+    """One rollout: forward pass with sampled actions; returns a Trajectory
+    with T = num_layers, B = batch * kv_heads."""
+    logits, aux = tr.forward_dense(
+        cfg, params, batch["tokens"], policy_params=agent, rank_rng=rng,
+        greedy=False, compute_fidelity=True, collect_aux="rl")
+    la = aux["layers"]
+    L = cfg.num_layers
+    b = batch["tokens"].shape[0]
+    hkv, hq = cfg.num_kv_heads, cfg.num_heads
+    dh = cfg.resolved_head_dim()
+
+    fid = la["fidelity"]                            # (L, b, hq)
+    fid_kv = fid.reshape(L, b, hkv, hq // hkv).mean(-1)
+    rw = reward(cfg.rank, fid_kv, la["rank"], la["delta_a_rel"], dh, dh)
+
+    B = b * hkv
+    feats = {k: v.reshape(L, B, -1) for k, v in la["features"].items()}
+    traj = ppo_mod.Trajectory(
+        feats=feats,
+        actions=la["action_idx"].reshape(L, B),
+        logp_old=la["logp"].reshape(L, B),
+        values_old=la["value"].reshape(L, B),
+        rewards=rw.reshape(L, B),
+        action_mask=la["action_mask"].reshape(L, B, -1),
+    )
+    metrics = {
+        "reward_mean": jnp.mean(rw),
+        "fidelity_mean": jnp.mean(fid),
+        "rank_mean": jnp.mean(la["rank"].astype(jnp.float32)),
+        "lm_loss_proxy": jnp.mean(jnp.square(logits[..., 0]) * 0),
+    }
+    return traj, metrics
+
+
+def collect_bc_batch(cfg: ModelConfig, params, agent, batch, rng
+                     ) -> Tuple[Dict, jnp.ndarray, jnp.ndarray]:
+    """Collect (features, oracle_actions, action_mask) for BC."""
+    _, aux = tr.forward_dense(
+        cfg, params, batch["tokens"], policy_params=agent, rank_rng=rng,
+        greedy=True, collect_aux="rl", collect_qkv=True)
+    la = aux["layers"]
+    L = cfg.num_layers
+    b = batch["tokens"].shape[0]
+    hkv = cfg.num_kv_heads
+
+    qkv = la["qkv"]                                 # each (L, b, s, h, d)
+    oracle = jax.vmap(
+        lambda q, k, v: oracle_actions(cfg.rank, q, k, v)[0]
+    )(qkv["q"], qkv["k"], qkv["v"])                 # (L, b, hkv)
+
+    B = L * b * hkv
+    feats = {k: v.reshape(B, -1) for k, v in la["features"].items()}
+    return feats, oracle.reshape(B), la["action_mask"].reshape(B, -1)
+
+
+def train_agent(cfg: ModelConfig, params, agent, data, *,
+                bc_steps: int = 20, ppo_steps: int = 30,
+                ppo_epochs: int = 2, lr: float = 3e-4, seed: int = 0
+                ) -> Tuple[dict, Dict]:
+    """Full hybrid pipeline. Returns (trained agent, history)."""
+    tc = TrainConfig(lr=lr, total_steps=bc_steps + ppo_steps * ppo_epochs,
+                     warmup_steps=5, weight_decay=0.0, grad_clip=1.0)
+    lr_fn = make_lr_fn(tc)
+    opt = adamw.init(agent)
+    rng = jax.random.PRNGKey(seed)
+    history = {"bc_loss": [], "ppo": []}
+
+    # ---- stage 1: behaviour cloning -------------------------------------
+    bc_grad = jax.jit(jax.value_and_grad(
+        lambda a, f, y, m: ppo_mod.bc_loss(a, f, y, m)))
+    collect_bc = jax.jit(
+        lambda p, a, b, r: collect_bc_batch(cfg, p, a, b, r))
+    for i in range(bc_steps):
+        rng, k1 = jax.random.split(rng)
+        feats, ys, mask = collect_bc(params, agent, data.batch_at(i), k1)
+        loss, g = bc_grad(agent, feats, ys, mask)
+        agent, opt, _ = adamw.update(tc, lr_fn, opt, agent, g)
+        history["bc_loss"].append(float(loss))
+
+    # ---- stage 2: PPO ----------------------------------------------------
+    rollout = jax.jit(lambda p, a, b, r, t: collect_rollout(cfg, p, a, b, r, t))
+    ppo_grad = jax.jit(jax.value_and_grad(
+        lambda a, tr_: ppo_mod.ppo_loss(a, tr_), has_aux=True))
+    for i in range(ppo_steps):
+        rng, k1 = jax.random.split(rng)
+        traj, metrics = rollout(params, agent, data.batch_at(1000 + i), k1, i)
+        for _ in range(ppo_epochs):
+            (loss, pm), g = ppo_grad(agent, traj)
+            agent, opt, _ = adamw.update(tc, lr_fn, opt, agent, g)
+        history["ppo"].append({
+            "reward": float(metrics["reward_mean"]),
+            "rank_mean": float(metrics["rank_mean"]),
+            "fidelity": float(metrics["fidelity_mean"]),
+            "loss": float(loss),
+        })
+    return agent, history

@@ -1,0 +1,67 @@
+"""Static low-rank baselines (Performer / Nystromformer) sanity: they must
+approximate softmax attention on easy inputs and stay finite everywhere."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (favor_features, nystrom_attention,
+                                  orthogonal_proj, performer_attention)
+from repro.models.attention import attend
+
+K0 = jax.random.PRNGKey(0)
+
+
+def _qkv(b=2, s=48, h=2, d=16, scale=0.3):
+    ks = jax.random.split(K0, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d)) * scale
+    k = jax.random.normal(ks[1], (b, s, h, d)) * scale
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    return q, k, v
+
+
+def test_performer_approximates_softmax_noncausal():
+    q, k, v = _qkv()
+    d = q.shape[-1]
+    proj = orthogonal_proj(jax.random.PRNGKey(3), q.shape[2], 256, d)
+    out = performer_attention(q, k, v, proj=proj, causal=False)
+    # exact softmax attention with the kernel's 1/sqrt(d) scaling
+    ref = attend(q, k, v, scale=d ** -0.5, causal=False)
+    # random features: expect high correlation, not exactness
+    c = np.corrcoef(np.asarray(out).ravel(), np.asarray(ref).ravel())[0, 1]
+    assert c > 0.9, c
+
+
+def test_performer_causal_finite_and_causal():
+    q, k, v = _qkv()
+    d = q.shape[-1]
+    proj = orthogonal_proj(jax.random.PRNGKey(3), q.shape[2], 128, d)
+    out = performer_attention(q, k, v, proj=proj, causal=True)
+    assert np.isfinite(np.asarray(out)).all()
+    # causality: output at t must not depend on future v
+    v2 = v.at[:, -1].set(v[:, -1] + 100.0)
+    out2 = performer_attention(q, k, v2, proj=proj, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, :-1]),
+                               np.asarray(out2[:, :-1]), atol=1e-5)
+
+
+def test_favor_features_positive():
+    q, _, _ = _qkv()
+    proj = orthogonal_proj(jax.random.PRNGKey(3), q.shape[2], 64, q.shape[-1])
+    phi = favor_features(q, proj)
+    assert (np.asarray(phi) >= 0).all()
+
+
+def test_nystrom_approximates_softmax_noncausal():
+    q, k, v = _qkv(s=64)
+    d = q.shape[-1]
+    out = nystrom_attention(q, k, v, n_landmarks=32, causal=False)
+    ref = attend(q, k, v, scale=d ** -0.5, causal=False)
+    c = np.corrcoef(np.asarray(out).ravel(), np.asarray(ref).ravel())[0, 1]
+    assert c > 0.8, c
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_nystrom_causal_finite():
+    q, k, v = _qkv(s=64)
+    out = nystrom_attention(q, k, v, n_landmarks=16, causal=True)
+    assert np.isfinite(np.asarray(out)).all()

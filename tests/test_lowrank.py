@@ -1,0 +1,126 @@
+"""Spectral machinery: Gram route vs jnp SVD, projections, subspace and
+power iteration, incremental extension, masked == static equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lowrank as lr
+from repro.models.attention import (apply_rank_masked, apply_rank_static,
+                                    attend, spectral_ctx)
+
+K0 = jax.random.PRNGKey(0)
+
+
+def test_gram_spectrum_matches_svd():
+    x = jax.random.normal(K0, (3, 40, 16))
+    s2, e = lr.gram_spectrum(lr.gram(x))
+    sv = jnp.linalg.svd(x, compute_uv=False)
+    np.testing.assert_allclose(np.sqrt(np.asarray(s2)), np.asarray(sv),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_projection_is_best_rank_r():
+    """x E_r E_r^T must hit the Eckart-Young optimum (vs SVD truncation)."""
+    x = jax.random.normal(K0, (30, 8))
+    s2, e = lr.gram_spectrum(lr.gram(x))
+    r = 3
+    mask = (jnp.arange(8) < r).astype(jnp.float32)
+    xr = lr.project_masked(x, e, mask)
+    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    x_opt = (u[:, :r] * s[:r]) @ vt[:r]
+    err_g = float(jnp.linalg.norm(x - xr))
+    err_opt = float(jnp.linalg.norm(x - x_opt))
+    assert abs(err_g - err_opt) < 1e-4
+
+
+def test_ner_monotone_and_bounded():
+    x = jax.random.normal(K0, (2, 4, 64, 16))
+    s2, _ = lr.gram_spectrum(lr.gram(x))
+    ner = lr.ner_curve(s2)
+    d = np.diff(np.asarray(ner), axis=-1)
+    assert (d >= -1e-6).all(), "NER must be nondecreasing in r"
+    np.testing.assert_allclose(np.asarray(ner[..., -1]), 1.0, atol=1e-5)
+
+
+def test_rank_for_energy_hits_threshold():
+    x = jax.random.normal(K0, (1, 1, 128, 16))
+    s2, _ = lr.gram_spectrum(lr.gram(x))
+    r = lr.rank_for_energy(s2, 0.9, 1, 16)
+    ner = lr.ner_curve(s2)
+    r_i = int(r[0, 0])
+    assert float(ner[0, 0, r_i - 1]) >= 0.9
+    if r_i > 1:
+        assert float(ner[0, 0, r_i - 2]) < 0.9
+
+
+def test_subspace_iteration_approximates_eigh():
+    g = lr.gram(jax.random.normal(K0, (64, 16)))
+    s2, e = lr.gram_spectrum(g)
+    evals, basis = lr.subspace_iteration(g, r=4, iters=30)
+    np.testing.assert_allclose(np.asarray(evals), np.asarray(s2[:4]),
+                               rtol=5e-3)
+    # reconstruction through the subspace is near-optimal (the serving-path
+    # criterion; individual eigvectors may rotate within near-degenerate
+    # eigenvalue clusters)
+    err_sub = float(jnp.linalg.norm(g - basis @ (basis.T @ g)))
+    err_opt = float(jnp.linalg.norm(g - e[:, :4] @ (e[:, :4].T @ g)))
+    assert err_sub <= err_opt * 1.05 + 1e-3
+
+
+def test_incremental_extend_matches_full():
+    g = lr.gram(jax.random.normal(K0, (64, 16)))
+    s2, e = lr.gram_spectrum(g)
+    _, basis4 = lr.subspace_iteration(g, r=4, iters=30)
+    evals_new, basis8 = lr.incremental_extend(g, basis4, extra=4, iters=30)
+    np.testing.assert_allclose(np.asarray(evals_new), np.asarray(s2[4:8]),
+                               rtol=5e-2, atol=1e-3)
+    err_sub = float(jnp.linalg.norm(g - basis8 @ (basis8.T @ g)))
+    err_opt = float(jnp.linalg.norm(g - e[:, :8] @ (e[:, :8].T @ g)))
+    assert err_sub <= err_opt * 1.10 + 1e-3
+
+
+def test_power_iteration_specnorm():
+    w = jax.random.normal(K0, (48, 32))
+    est = lr.power_iteration_specnorm(w, iters=20)
+    true = jnp.linalg.norm(w, ord=2)
+    np.testing.assert_allclose(float(est), float(true), rtol=1e-2)
+
+
+def test_masked_equals_static_realisation():
+    """The serving bucket (rank-r factors + mixing matrix) must produce the
+    same attention output as the masked realisation at the same rank."""
+    b, s, hq, hkv, d = 2, 24, 4, 2, 16
+    ks = jax.random.split(K0, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    ctx = spectral_ctx(q, k)
+    r = 6
+    rank_q = jnp.full((b, hq), r, jnp.int32)
+    rank_k = jnp.full((b, hkv), r, jnp.int32)
+    qm, km = apply_rank_masked(q, k, ctx, rank_q, rank_k)
+    qs, ks_ = apply_rank_static(q, k, ctx, r)
+    from repro.models.common import repeat_kv
+    scale = d ** -0.5
+    om = attend(qm, repeat_kv(km, 2), repeat_kv(v, 2), scale=scale, causal=True)
+    ost = attend(qs, repeat_kv(ks_, 2), repeat_kv(v, 2), scale=scale, causal=True)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(ost),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_fidelity_increases_with_rank():
+    b, s, h, d = 2, 48, 2, 16
+    ks = jax.random.split(K0, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    ctx = spectral_ctx(q, k)
+    o_full = attend(q, k, v, scale=d ** -0.5, causal=True)
+    errs = []
+    for r in (2, 4, 8, 16):
+        rr = jnp.full((b, h), r, jnp.int32)
+        qm, km = apply_rank_masked(q, k, ctx, rr, rr)
+        o_r = attend(qm, km, v, scale=d ** -0.5, causal=True)
+        errs.append(float(jnp.linalg.norm(o_r - o_full)))
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[3] < 1e-3           # full rank recovers exactly

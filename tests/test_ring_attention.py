@@ -1,0 +1,53 @@
+"""Ring attention == exact attention, on a real 8-device ring (subprocess so
+the forced device count doesn't leak)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax, jax.numpy as jnp
+import numpy as np
+sys.path.insert(0, "__SRC__")
+from repro.dist.ring_attention import make_ring_attention
+from repro.kernels.ref import flash_ref
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+b, S, h, d = 2, 64, 2, 16
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (b, S, h, d))
+k = jax.random.normal(ks[1], (b, S, h, d))
+v = jax.random.normal(ks[2], (b, S, h, d))
+outs = {}
+for causal in (True, False):
+    with mesh:
+        fn = make_ring_attention(mesh, scale=d ** -0.5, causal=causal)
+        out = jax.jit(fn)(q, k, v)
+    ref = flash_ref(jnp.transpose(q, (0, 2, 1, 3)),
+                    jnp.transpose(k, (0, 2, 1, 3)),
+                    jnp.transpose(v, (0, 2, 1, 3)),
+                    scale=d ** -0.5, causal=causal)
+    ref = jnp.transpose(ref, (0, 2, 1, 3))
+    outs[str(causal)] = float(jnp.max(jnp.abs(out - ref)))
+print(json.dumps(outs))
+"""
+
+
+def test_ring_attention_8dev():
+    code = _SUBPROC.replace("__SRC__", os.path.abspath(SRC))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    errs = json.loads(out.stdout.strip().splitlines()[-1])
+    assert errs["True"] < 1e-4, errs
+    assert errs["False"] < 1e-4, errs
