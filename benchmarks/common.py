@@ -54,7 +54,6 @@ def train_lm(cfg: ModelConfig, *, steps: int = BENCH_STEPS, seed: int = 0,
     data = SyntheticLM(cfg.vocab_size, BENCH_SEQ, BENCH_BATCH,
                        seed=BENCH_VOCAB_SEED)
 
-    kw = {}
     if cfg.rank.mode == "drrl":
         assert agent is not None
 

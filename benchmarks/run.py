@@ -85,7 +85,25 @@ def bench_roofline(quick=False):
     return us, derived
 
 
+def bench_smoke(quick=False):
+    """CI canary: one train step + one eval batch + the FLOPs probe at tiny
+    scale, through the same shared-harness code paths every table/figure
+    uses — so import or API rot in benchmarks/ fails CI in seconds."""
+    del quick  # always minimal
+    from benchmarks.common import attn_flops_fraction, bench_cfg, eval_ppl, train_lm
+    t0 = time.monotonic()
+    cfg = bench_cfg("fixed")
+    out = train_lm(cfg, steps=1)
+    ppl = eval_ppl(cfg, out["params"], out["fns"], n_batches=1)
+    frac = attn_flops_fraction(cfg, out["params"])
+    us = (time.monotonic() - t0) * 1e6
+    import numpy as np
+    assert np.isfinite(ppl) and 0.0 < frac <= 1.0
+    return us, f"ppl={ppl:.2f};attn_flops_frac={frac:.3f};steps=1"
+
+
 BENCHES = {
+    "smoke": bench_smoke,
     "table1": bench_table1,
     "table2": bench_table2,
     "table3": bench_table3,
@@ -101,7 +119,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, one step — CI canary for the harness")
     args = ap.parse_args()
+    if args.smoke:
+        print("name,us_per_call,derived")
+        us, derived = bench_smoke()
+        print(f"smoke,{us:.0f},{derived}", flush=True)
+        return
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:

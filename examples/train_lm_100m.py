@@ -20,7 +20,6 @@ from repro.dist import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.models.api import get_model
 from repro.train.loop import run_training
-from repro import nn
 
 
 def main():

@@ -1,0 +1,4 @@
+"""repro: paper reproduction framework (models, kernels, dist, launch)."""
+from repro.compat import ensure_jax_compat
+
+ensure_jax_compat()

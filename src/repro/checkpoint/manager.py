@@ -7,7 +7,6 @@ Format: one .npy per leaf + an orjson manifest {path -> {file, spec, dtype}}.
 """
 from __future__ import annotations
 
-import os
 import pathlib
 import shutil
 import threading
@@ -74,7 +73,16 @@ class CheckpointManager:
         flat, _ = jax.tree_util.tree_flatten_with_path(tree)
         spec_flat = (jax.tree_util.tree_leaves(
             specs, is_leaf=lambda x: isinstance(x, P))
-            if specs is not None else [None] * len(flat))
+            if specs is not None else [])
+        if len(spec_flat) > len(flat):
+            raise ValueError(
+                f"specs has {len(spec_flat)} leaves but tree has only "
+                f"{len(flat)}")
+        # specs may cover only a leading subtree (e.g. param specs for a
+        # (params, opt_state) tree): the remaining leaves store no spec and
+        # load replicated — zip truncation here used to silently drop them
+        # from the checkpoint entirely
+        spec_flat += [None] * (len(flat) - len(spec_flat))
         host = [(path_str(p), np.asarray(x)) for p, x in flat]
 
         def _write():

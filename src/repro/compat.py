@@ -1,0 +1,41 @@
+"""Forward-compat shims for the pinned jax (0.4.37 / jaxlib 0.4.36).
+
+Call sites across the repo (tests, launch, dist) target the newer mesh API:
+``jax.make_mesh(shape, names, axis_types=...)`` and ``jax.sharding.AxisType``.
+Both appeared after 0.4.37. On an older jax we provide the missing enum and
+accept-and-drop the ``axis_types`` kwarg — axis types only select the
+sharding-in-types tracing mode, which nothing in this repo relies on for
+correctness (all shardings are expressed as explicit PartitionSpecs).
+
+Importing :mod:`repro` applies the shim exactly once; on a new-enough jax it
+is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def ensure_jax_compat() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            del axis_types
+            return orig(axis_shapes, axis_names, devices=devices)
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh

@@ -6,8 +6,6 @@ for the Table-1/Table-3 reproductions.
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -77,11 +75,6 @@ def nystrom_attention(q, k, v, *, n_landmarks: int = 32,
 
     f1 = soft(jnp.einsum("bqhd,bmhd->bhqm", q, k_l))          # (b,h,s,m)
     a_mid = soft(jnp.einsum("bqhd,bmhd->bhqm", q_l, k_l))     # (b,h,m,m)
-    mask3 = None
-    if causal:
-        pos_q = jnp.arange(s)[:, None]
-        pos_k = jnp.arange(s)[None, :]
-        mask3 = (pos_k <= pos_q)[None, None]
     f3 = soft(jnp.einsum("bmhd,bkhd->bhmk", q_l, k), mask=None)  # (b,h,m,s)
 
     # iterative pinv of a_mid

@@ -7,7 +7,7 @@ per-token resharding is ever required (DESIGN.md section 3.6).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

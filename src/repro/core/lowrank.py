@@ -100,15 +100,21 @@ def mixing_matrix(eq: jnp.ndarray, ek: jnp.ndarray, r: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def subspace_iteration(g: jnp.ndarray, r: int, iters: int = 3,
-                       key: Optional[jax.Array] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                       key: Optional[jax.Array] = None,
+                       oversample: int = 4) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-r eigenpairs of PSD g (..., d, d) via subspace (block power) iteration.
 
     Pure matmuls + small QR: the MXU-native alternative to eigh used on the
-    serving path. Returns (evals_desc (..., r), basis (..., d, r))."""
+    serving path. The block is oversampled by ``oversample`` columns so the
+    convergence rate is set by the spectral gap at r+p rather than at r
+    (near-degenerate clusters at the cut make the bare-r iteration stall);
+    only the top r pairs are returned. Returns (evals_desc (..., r),
+    basis (..., d, r))."""
     d = g.shape[-1]
+    p = min(oversample, d - r)
     if key is None:
         key = jax.random.PRNGKey(0)
-    q0 = jax.random.normal(key, g.shape[:-2] + (d, r), jnp.float32)
+    q0 = jax.random.normal(key, g.shape[:-2] + (d, r + p), jnp.float32)
     q, _ = jnp.linalg.qr(q0)
 
     def body(q, _):
@@ -120,8 +126,8 @@ def subspace_iteration(g: jnp.ndarray, r: int, iters: int = 3,
     # Rayleigh-Ritz on the subspace
     h = jnp.einsum("...dr,...de,...es->...rs", q, g, q)
     evals, u = jnp.linalg.eigh(h)
-    evals = jnp.flip(evals, axis=-1)
-    u = jnp.flip(u, axis=-1)
+    evals = jnp.flip(evals, axis=-1)[..., :r]
+    u = jnp.flip(u, axis=-1)[..., :r]
     basis = jnp.einsum("...dr,...rs->...ds", q, u)
     return jnp.maximum(evals, 0.0), basis
 

@@ -12,7 +12,6 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 
 from repro.configs.base import RankConfig
-from repro.core import lowrank as lr
 from repro.core import perturbation as pert
 from repro.core.rewards import reward
 from repro.models.attention import attend, apply_rank_masked, spectral_ctx

@@ -27,7 +27,6 @@ class Trajectory(NamedTuple):
 def gae(rewards: jnp.ndarray, values: jnp.ndarray, gamma: float = 0.99,
         lam: float = 0.95) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """rewards/values: (T, B). Episode terminates after the last layer."""
-    T = rewards.shape[0]
     next_values = jnp.concatenate([values[1:], jnp.zeros_like(values[:1])], 0)
     deltas = rewards + gamma * next_values - values
 

@@ -1,0 +1,12 @@
+"""Distributed execution: sharding rules, ring attention, pipelining.
+
+Modules
+-------
+sharding        path-based PartitionSpec rules over a ("data", "model") mesh
+ctx             activation-sharding constraints derived from a ModelConfig
+ring_attention  sequence-parallel exact attention over a device ring
+pipeline        streamed microbatch pipeline over a stage axis
+"""
+from repro.dist import ctx, pipeline, ring_attention, sharding
+
+__all__ = ["ctx", "pipeline", "ring_attention", "sharding"]

@@ -1,0 +1,45 @@
+"""Activation-sharding constraints derived from a ModelConfig.
+
+These are *hints* placed with ``with_sharding_constraint`` inside model
+code; they only fire when ``cfg.mesh_axes`` names the ambient mesh (the
+launch layer sets it — on a bare CPU run it stays empty and every helper
+returns None, so model code never needs to branch on distribution).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+
+def _dp(axes: Tuple[str, ...]):
+    dp = tuple(a for a in axes if a != "model")
+    if not dp:
+        return None
+    return dp[0] if len(dp) == 1 else dp
+
+
+def logits_spec(cfg) -> Optional[P]:
+    """Spec for (batch, seq, vocab) logits: batch over the data axes, vocab
+    over ``model`` (the lm head / tied embedding is vocab-sharded — see
+    dist.sharding), sequence replicated.
+
+    None when the config carries no mesh axes (single-host runs) so the
+    cross-entropy in nn.py skips the constraint entirely.
+    """
+    axes = tuple(getattr(cfg, "mesh_axes", ()) or ())
+    if not axes:
+        return None
+    tp = "model" if ("model" in axes
+                     and getattr(cfg, "sharding", "fsdp_tp")
+                     in ("tp", "fsdp_tp")) else None
+    return P(_dp(axes), None, tp)
+
+
+def activation_spec(cfg, ndim: int = 3) -> Optional[P]:
+    """Spec for (batch, seq, d_model)-shaped activations: batch over the
+    data axes, everything else replicated."""
+    axes = tuple(getattr(cfg, "mesh_axes", ()) or ())
+    if not axes or ndim < 1:
+        return None
+    return P(_dp(axes), *([None] * (ndim - 1)))

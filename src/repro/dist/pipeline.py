@@ -1,0 +1,70 @@
+"""Streamed microbatch pipeline parallelism over a stage mesh axis.
+
+Stage ``i``'s weights (the leading dim of every param leaf) live on device
+``i``. Microbatches stream through a GPipe-style schedule: at step ``t``
+device 0 feeds microbatch ``t`` into stage 0 while device ``i`` runs the
+activation it received last step, then every activation hops one stage
+down the ring with ``ppermute``. After ``n_micro + n_stages - 1`` steps
+the last stage has emitted every microbatch; the result equals applying
+the stages sequentially, with per-device weight memory 1/n of the model
+and the bubble amortised by the microbatch count.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _pipe_body(params, x, *, stage_fn, axis_name, n_stages):
+    """Per-device body. params: stage-local leaves with a leading dim of 1
+    (the shard of the stacked stage dim); x: (n_micro, mb, ...) replicated."""
+    idx = jax.lax.axis_index(axis_name)
+    local = jax.tree_util.tree_map(lambda a: a[0], params)
+    n_micro = x.shape[0]
+    mb_shape = x.shape[1:]
+
+    state = jnp.zeros(mb_shape, x.dtype)          # activation in flight
+    outputs = jnp.zeros_like(x)                   # valid only on last stage
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    for t in range(n_micro + n_stages - 1):
+        # stage 0 picks up a fresh microbatch; later stages use what the
+        # previous stage sent them (zeros during fill/drain — computed on,
+        # then discarded by the output mask below)
+        feed = x[t] if t < n_micro else jnp.zeros(mb_shape, x.dtype)
+        inp = jnp.where(idx == 0, feed, state)
+        y = stage_fn(local, inp)
+        out_idx = t - (n_stages - 1)              # microbatch leaving stage n-1
+        if out_idx >= 0:
+            outputs = jnp.where(idx == n_stages - 1,
+                                outputs.at[out_idx].set(y), outputs)
+        if t != n_micro + n_stages - 2:
+            state = jax.lax.ppermute(y, axis_name, perm=perm)
+
+    # broadcast the last stage's outputs to every device so the result is
+    # replicated (everyone else contributes zeros)
+    outputs = jnp.where(idx == n_stages - 1, outputs, 0.0)
+    return jax.lax.psum(outputs, axis_name)
+
+
+def make_pipeline(mesh, stage_fn: Callable, *, axis_name: str = "pod",
+                  n_stages: Optional[int] = None):
+    """Build a pipeline over ``axis_name``.
+
+    ``stage_fn(stage_params, x_mb)`` applies ONE stage to one microbatch.
+    The returned ``pipe(params, x)`` takes params whose leaves are stacked
+    over a leading stage dim (== ring size) and ``x`` of shape
+    (n_micro, microbatch, ...); it returns the fully-pipelined result with
+    the same shape as ``x``.
+    """
+    n = n_stages or dict(mesh.shape)[axis_name]
+    body = partial(_pipe_body, stage_fn=stage_fn, axis_name=axis_name,
+                   n_stages=n)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis_name), P()),
+                     out_specs=P(), check_rep=False)

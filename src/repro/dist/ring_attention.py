@@ -1,0 +1,90 @@
+"""Sequence-parallel ring attention (exact, flash-style online softmax).
+
+The sequence dim of q/k/v is sharded over one mesh axis; each device keeps
+its q block resident and streams k/v blocks around the ring with
+``ppermute``, folding every block into a numerically-stable running
+softmax (running max ``m``, normaliser ``l``, weighted accumulator
+``acc``). After ``n`` hops every q position has attended to the full
+sequence, so the result equals single-device attention (kernels/ref
+.flash_ref) to float tolerance — with peak activation memory of one
+(block x block) score tile instead of the full (S x S) matrix.
+
+Causality is enforced per block from the *global* positions of the q and
+k blocks; blocks that are entirely in the future contribute nothing (their
+probability mass is masked to zero before accumulation, so a fully-masked
+block cannot poison the running max).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+_NEG_INF = -1e30
+
+
+def _ring_block(q, k, v, *, scale, causal, axis_name, axis_size):
+    """Per-device body. q/k/v: (b, C, h, d) local blocks; C = S // n."""
+    idx = jax.lax.axis_index(axis_name)
+    b, C, h, d = q.shape
+    dv = v.shape[-1]
+
+    qf = q.astype(jnp.float32) * scale
+    q_pos = idx * C + jnp.arange(C)                       # global q positions
+
+    m = jnp.full((b, h, C), _NEG_INF, jnp.float32)        # running row max
+    l = jnp.zeros((b, h, C), jnp.float32)                 # running normaliser
+    acc = jnp.zeros((b, h, C, dv), jnp.float32)           # running output
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+
+    kv = (k, v)
+    for hop in range(axis_size):
+        k_blk, v_blk = kv
+        src = (idx - hop) % axis_size                     # origin of this block
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                       k_blk.astype(jnp.float32))         # (b, h, C, C)
+        if causal:
+            k_pos = src * C + jnp.arange(C)
+            mask = k_pos[None, :] <= q_pos[:, None]       # (Cq, Ck)
+            mask = jnp.broadcast_to(mask[None, None], s.shape)
+        else:
+            mask = jnp.ones(s.shape, bool)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # masked positions must contribute exactly zero even when the whole
+        # block is masked (m_new == _NEG_INF would make exp(s - m_new) == 1)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32))
+        m = m_new
+
+        if hop != axis_size - 1:
+            kv = jax.lax.ppermute(kv, axis_name, perm=perm)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(v.dtype)  # (b, C, h, dv)
+
+
+def make_ring_attention(mesh, *, scale: float, causal: bool = True,
+                        axis_name: Optional[str] = None):
+    """Build ring attention over ``axis_name`` (default: first mesh axis).
+
+    Returns ``fn(q, k, v)`` taking (b, S, h, d) arrays with S divisible by
+    the ring size; the sequence dim is sharded over the ring and the output
+    comes back with the same layout.
+    """
+    axis = axis_name or mesh.axis_names[0]
+    n = dict(mesh.shape)[axis]
+    seq_spec = P(None, axis, None, None)
+    body = partial(_ring_block, scale=scale, causal=causal,
+                   axis_name=axis, axis_size=n)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(seq_spec, seq_spec, seq_spec),
+                     out_specs=seq_spec, check_rep=False)

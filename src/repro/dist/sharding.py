@@ -1,0 +1,203 @@
+"""Path-based PartitionSpec rules over a ("data", "model") mesh.
+
+Every init_* in the model zoo names its weights consistently (wq/wk/wv are
+column-parallel, wo/w_down row-parallel, MoE expert stacks carry an expert
+dim, …), so sharding is decided from the *leaf path*, not from callers
+threading specs around. The rules are Megatron-style:
+
+- column-parallel matrices shard their output dim over ``model`` and (under
+  fsdp) their input dim over ``data``;
+- row-parallel matrices shard their input dim over ``model`` and their
+  output dim over ``data``;
+- MoE expert stacks shard the expert dim over ``model`` (expert
+  parallelism — the batched-einsum dispatch in models/moe.py is written for
+  exactly this) and the matrix input dim over ``data``;
+- embeddings/lm heads shard the vocab dim over ``model``;
+- norms, biases without a model-parallel dim, and anything unrecognised
+  stay replicated.
+
+Any axis that does not evenly divide its dim is **dropped** (never an
+error): the same rule table serves the 512-chip production mesh and a
+1-device CPU host mesh, and reduced configs with prime dims simply fall
+back to replication. ``cfg.sharding`` selects which axes are live:
+``dp`` (replicated params), ``tp``, ``fsdp``, ``fsdp_tp``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# leaf names whose LAST dim is the model-parallel (output) dim
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "wr", "wg", "wa", "w_gate", "w_up",
+    "wq_a", "wq_b", "wkv_a", "wkv_b", "in_proj", "lm_head", "router",
+    "bq", "bk", "bv", "a",
+})
+# leaf names whose SECOND-TO-LAST dim is the model-parallel (input) dim
+_ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj", "wb", "b"})
+# leaves holding a vocab-major embedding table: (V, d)
+_EMBED = frozenset({"embed"})
+# MoE expert stacks: (..., E, in, out) under an immediate "moe" parent
+_EXPERT = frozenset({"w_gate", "w_up", "w_down"})
+
+
+def path_str(path: Sequence[Any]) -> str:
+    """Stable string form of a jax tree path: 'layers/attn/wq'.
+
+    Dict keys, sequence indices, attr names, and flattened indices all
+    render as their bare token, joined by '/'; checkpoint manifests key
+    leaves by this string and round-trip it on load.
+    """
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _fit_axes(dim: int, axes: Tuple[str, ...], sizes: dict
+              ) -> Optional[Any]:
+    """Largest prefix of ``axes`` (present in the mesh) that divides ``dim``.
+
+    Returns a spec entry: an axis name, a tuple of names, or None.
+    """
+    axes = tuple(a for a in axes if a in sizes)
+    while axes:
+        if dim % math.prod(sizes[a] for a in axes) == 0:
+            break
+        axes = axes[:-1]
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _entry(spec_axes, dim, sizes):
+    """Normalise one per-dim rule entry through the divisibility check."""
+    if spec_axes is None:
+        return None
+    if isinstance(spec_axes, str):
+        spec_axes = (spec_axes,)
+    return _fit_axes(dim, tuple(spec_axes), sizes)
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    """Every non-'model' mesh axis, in mesh order ('pod' before 'data')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _param_rule(path, shape, cfg, mesh, *, use_tp: bool, use_fsdp: bool
+                ) -> P:
+    sizes = _mesh_sizes(mesh)
+    names = [p.lower() for p in
+             (path_str(path).split("/") if path else [])]
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    nd = len(shape)
+    spec = [None] * nd
+
+    model = "model" if (use_tp and "model" in sizes) else None
+    data = _data_axes(mesh) if use_fsdp else None
+
+    if nd >= 1 and leaf in _EMBED:
+        # (V, d): vocab over model (matches the tied-head logits einsum),
+        # feature over data under fsdp
+        spec[0] = model
+        if nd >= 2:
+            spec[1] = data
+    elif nd >= 3 and leaf in _EXPERT and parent == "moe":
+        # expert stack (..., E, in, out): experts over model, input over data
+        spec[-3] = model
+        spec[-2] = data
+    elif nd >= 1 and leaf in _COL_PARALLEL:
+        spec[-1] = model
+        if nd >= 2:
+            spec[-2] = data
+    elif nd >= 2 and leaf in _ROW_PARALLEL:
+        spec[-2] = model
+        spec[-1] = data
+    # everything else (norms, scalar gates, conv kernels, caches of
+    # unknown provenance) stays replicated
+
+    return P(*[_entry(s, d, sizes) for s, d in zip(spec, shape)])
+
+
+def param_pspecs(params, cfg, mesh):
+    """PartitionSpec tree (same structure as ``params``) for model weights.
+
+    ``params`` may hold arrays or ShapeDtypeStructs — anything with a
+    ``.shape``. ``cfg.sharding`` picks the parallelism style.
+    """
+    mode = getattr(cfg, "sharding", "fsdp_tp")
+    use_tp = mode in ("tp", "fsdp_tp")
+    use_fsdp = mode in ("fsdp", "fsdp_tp")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        _param_rule(path, tuple(leaf.shape), cfg, mesh,
+                    use_tp=use_tp, use_fsdp=use_fsdp)
+        if mode != "dp" else P(*([None] * len(leaf.shape)))
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(batch, mesh):
+    """Shard the leading (batch) dim of every leaf over the data axes."""
+    sizes = _mesh_sizes(mesh)
+    dp = _data_axes(mesh)
+
+    def rule(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        entries = [_entry(dp, shape[0], sizes)] + [None] * (len(shape) - 1)
+        return P(*entries)
+
+    return jax.tree_util.tree_map(rule, batch)
+
+
+def cache_pspecs(cache, cfg, mesh):
+    """Decode-cache specs: batch over data; optional split-KV over model.
+
+    Cache leaves are laid out (layers, batch, seq, heads, head_dim) (or
+    (batch, ...) for unstacked states); scalars like ``len`` replicate.
+    With ``cfg.cache_seq_shard`` the sequence dim additionally shards over
+    ``model`` (split-KV decode).
+    """
+    sizes = _mesh_sizes(mesh)
+    dp = _data_axes(mesh)
+    seq_shard = getattr(cfg, "cache_seq_shard", False)
+
+    def rule(leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd < 2:
+            return P(*([None] * nd))
+        b_dim = 1 if nd >= 3 else 0
+        spec = [None] * nd
+        spec[b_dim] = _entry(dp, shape[b_dim], sizes)
+        if seq_shard and nd >= 3 and "model" in sizes:
+            spec[b_dim + 1] = _entry("model", shape[b_dim + 1], sizes)
+        return P(*spec)
+
+    return jax.tree_util.tree_map(rule, cache)
+
+
+def to_named(spec_tree, mesh):
+    """Map every PartitionSpec leaf to a NamedSharding on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

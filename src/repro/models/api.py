@@ -5,7 +5,7 @@ Every assigned architecture runs through this interface; the launch layer
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

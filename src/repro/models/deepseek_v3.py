@@ -80,7 +80,6 @@ def forward_deepseek(cfg: ModelConfig, params, tokens, *, positions=None,
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
 
-    aux_losses = []
     for lp in params["dense_layers"]:
         x, aux = _block(cfg, lp, x, positions, rank_ctx0, chunked)
 

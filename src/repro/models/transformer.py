@@ -5,7 +5,6 @@ Also hosts the generic FFN/MoE block dispatch used by the MoE family.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -16,7 +15,6 @@ from repro.configs.base import ModelConfig
 from repro.core import drrl
 from repro.models import moe as moe_mod
 from repro.models.attention import mhsa
-from repro.models.common import make_kv_cache
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,6 @@ dry-run (512 devices, fsdp_tp) — only the shardings differ.
 from __future__ import annotations
 
 import time
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

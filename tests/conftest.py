@@ -5,6 +5,15 @@ import sys
 # and benches must see 1 device (the dry-run sets 512 in its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container has no hypothesis wheel — use the shim
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
 import jax  # noqa: E402
 
+import repro  # noqa: E402,F401  (applies the jax forward-compat shim)
+
 jax.config.update("jax_enable_x64", False)
+
+# dist/slow markers are registered in pyproject.toml [tool.pytest.ini_options]

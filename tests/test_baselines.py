@@ -1,7 +1,6 @@
 """Static low-rank baselines (Performer / Nystromformer) sanity: they must
 approximate softmax attention on easy inputs and stay finite everywhere."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import (favor_features, nystrom_attention,

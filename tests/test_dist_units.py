@@ -1,0 +1,202 @@
+"""Fast single-host unit tests for repro.dist — no subprocesses, no forced
+device counts: path_str round-tripping, logits_spec per config, and the
+divisibility-dropping rules on hostile (prime) dims and trivial meshes."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import sharding as shd
+from repro.dist.ctx import activation_spec, logits_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh: sharding rules only consult .shape / .axis_names,
+    so unit tests can exercise big meshes without real devices."""
+
+    def __init__(self, **sizes):
+        self._sizes = dict(sizes)
+
+    @property
+    def shape(self):
+        return dict(self._sizes)
+
+    @property
+    def axis_names(self):
+        return tuple(self._sizes)
+
+
+def _cfg(**kw):
+    return get_config("qwen2.5-14b", reduced=True).with_(**kw)
+
+
+# ---------------------------------------------------------------- path_str
+
+def test_path_str_round_trips_dict_trees():
+    tree = {"layers": {"attn": {"wq": 1, "wo": 2}, "ln": 3},
+            "embed": 4}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        node = tree
+        for part in shd.path_str(path).split("/"):
+            node = node[part]
+        assert node == leaf
+
+
+def test_path_str_handles_list_indices():
+    tree = {"dense_layers": [{"w": 1}, {"w": 2}]}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = [shd.path_str(p) for p, _ in flat]
+    assert names == ["dense_layers/0/w", "dense_layers/1/w"]
+    for path, leaf in flat:
+        node = tree
+        for part in shd.path_str(path).split("/"):
+            node = node[int(part)] if part.isdigit() else node[part]
+        assert node == leaf
+
+
+def test_path_str_is_unique_per_leaf():
+    cfg = _cfg()
+    from repro.models.api import get_model
+    shapes = jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+    names = [shd.path_str(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(shapes)[0]]
+    assert len(names) == len(set(names))
+
+
+# ------------------------------------------------------------- logits_spec
+
+def test_logits_spec_none_without_mesh_axes():
+    assert logits_spec(_cfg(mesh_axes=())) is None
+
+
+def test_logits_spec_single_pod():
+    spec = logits_spec(_cfg(mesh_axes=("data", "model"), sharding="fsdp_tp"))
+    assert spec == P("data", None, "model")
+
+
+def test_logits_spec_multi_pod_batch_axes():
+    spec = logits_spec(
+        _cfg(mesh_axes=("pod", "data", "model"), sharding="fsdp_tp"))
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_logits_spec_dp_keeps_vocab_replicated():
+    spec = logits_spec(_cfg(mesh_axes=("data", "model"), sharding="dp"))
+    assert spec == P("data", None, None)
+
+
+def test_activation_spec():
+    assert activation_spec(_cfg(mesh_axes=())) is None
+    assert activation_spec(
+        _cfg(mesh_axes=("data", "model"))) == P("data", None, None)
+
+
+# ------------------------------------------- divisibility / rule dropping
+
+def test_prime_dims_drop_all_axes():
+    mesh = FakeMesh(data=4, model=2)
+    fake = {"layers": {"attn": {"wq": jnp.zeros((7, 13))}}}  # primes
+    spec = shd.param_pspecs(fake, _cfg(), mesh)
+    assert spec["layers"]["attn"]["wq"] == P(None, None)
+
+
+def test_partial_drop_keeps_dividing_axis():
+    mesh = FakeMesh(data=4, model=2)
+    fake = {"layers": {"attn": {"wq": jnp.zeros((7, 64))}}}
+    spec = shd.param_pspecs(fake, _cfg(), mesh)
+    # input dim 7 can't take 'data'; output dim 64 still takes 'model'
+    assert spec["layers"]["attn"]["wq"] == P(None, "model")
+
+
+def test_mesh_size_one_divides_everything():
+    mesh = FakeMesh(data=1, model=1)
+    fake = {"layers": {"attn": {"wq": jnp.zeros((7, 13))}}}
+    spec = shd.param_pspecs(fake, _cfg(), mesh)
+    assert spec["layers"]["attn"]["wq"] == P("data", "model")
+
+
+def test_col_and_row_parallel_rules():
+    mesh = FakeMesh(data=4, model=2)
+    fake = {"layers": {"attn": {"wq": jnp.zeros((2, 64, 32)),
+                                "wo": jnp.zeros((2, 32, 64))},
+                       "ffn": {"w_down": jnp.zeros((2, 32, 64))}}}
+    spec = shd.param_pspecs(fake, _cfg(), mesh)
+    assert spec["layers"]["attn"]["wq"] == P(None, "data", "model")
+    assert spec["layers"]["attn"]["wo"] == P(None, "model", "data")
+    assert spec["layers"]["ffn"]["w_down"] == P(None, "model", "data")
+
+
+def test_expert_stack_shards_expert_dim():
+    mesh = FakeMesh(data=4, model=2)
+    fake = {"layers": {"moe": {"w_gate": jnp.zeros((2, 4, 64, 32)),
+                               "router": jnp.zeros((2, 64, 4)),
+                               "shared": {"w_gate": jnp.zeros((2, 64, 32))}}}}
+    spec = shd.param_pspecs(fake, _cfg(), mesh)
+    assert spec["layers"]["moe"]["w_gate"] == P(None, "model", "data", None)
+    assert spec["layers"]["moe"]["router"] == P(None, "data", "model")
+    # shared expert is a plain column-parallel ffn, not an expert stack
+    assert spec["layers"]["moe"]["shared"]["w_gate"] == P(None, "data", "model")
+
+
+def test_dp_mode_replicates_everything():
+    mesh = FakeMesh(data=4, model=2)
+    fake = {"embed": jnp.zeros((64, 64)),
+            "layers": {"attn": {"wq": jnp.zeros((64, 64))}}}
+    spec = shd.param_pspecs(fake, _cfg(sharding="dp"), mesh)
+    for leaf in jax.tree_util.tree_leaves(
+            spec, is_leaf=lambda x: isinstance(x, P)):
+        assert leaf == P(None, None)
+
+
+def test_norms_replicate():
+    mesh = FakeMesh(data=4, model=2)
+    fake = {"layers": {"ln1": jnp.zeros((2, 64))}, "ln_f": jnp.zeros((64,))}
+    spec = shd.param_pspecs(fake, _cfg(), mesh)
+    assert spec["layers"]["ln1"] == P(None, None)
+    assert spec["ln_f"] == P(None)
+
+
+def test_batch_pspecs_shards_leading_dim():
+    mesh = FakeMesh(data=4, model=2)
+    batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+             "odd": jnp.zeros((7, 32)),            # prime batch: dropped
+             "scalar": jnp.zeros(())}
+    spec = shd.batch_pspecs(batch, mesh)
+    assert spec["tokens"] == P("data", None)
+    assert spec["odd"] == P(None, None)
+    assert spec["scalar"] == P()
+
+
+def test_batch_pspecs_multi_pod():
+    mesh = FakeMesh(pod=2, data=4, model=2)
+    spec = shd.batch_pspecs({"tokens": jnp.zeros((16, 8), jnp.int32)}, mesh)
+    assert spec["tokens"] == P(("pod", "data"), None)
+
+
+def test_cache_pspecs_batch_and_seq():
+    mesh = FakeMesh(data=4, model=2)
+    cache = {"k": jnp.zeros((2, 8, 64, 2, 16)),
+             "len": jnp.zeros((), jnp.int32)}
+    cfg = _cfg()
+    spec = shd.cache_pspecs(cache, cfg, mesh)
+    assert spec["k"] == P(None, "data", None, None, None)
+    assert spec["len"] == P()
+    spec = shd.cache_pspecs(cache, cfg.with_(cache_seq_shard=True), mesh)
+    assert spec["k"] == P(None, "data", "model", None, None)
+
+
+def test_param_pspecs_cover_model_leaves_host_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = _cfg()
+    from repro.models.api import get_model
+    shapes = jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+    specs = shd.param_pspecs(shapes, cfg, mesh)
+    flat_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_specs = {shd.path_str(p): s for p, s in
+                  jax.tree_util.tree_flatten_with_path(
+                      specs, is_leaf=lambda x: isinstance(x, P))[0]}
+    for path, leaf in flat_shapes:
+        spec = flat_specs[shd.path_str(path)]
+        assert len(spec) == len(leaf.shape), shd.path_str(path)

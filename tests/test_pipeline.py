@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 _SUBPROC = r"""
@@ -45,6 +47,8 @@ print(json.dumps({"err": err}))
 """
 
 
+@pytest.mark.dist
+@pytest.mark.slow
 def test_pipeline_4stage_matches_sequential():
     code = _SUBPROC.replace("__SRC__", os.path.abspath(SRC))
     env = dict(os.environ)

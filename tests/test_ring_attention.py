@@ -5,7 +5,8 @@ import os
 import subprocess
 import sys
 
-import numpy as np
+import pytest
+
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -41,6 +42,8 @@ print(json.dumps(outs))
 """
 
 
+@pytest.mark.dist
+@pytest.mark.slow
 def test_ring_attention_8dev():
     code = _SUBPROC.replace("__SRC__", os.path.abspath(SRC))
     env = dict(os.environ)

@@ -76,7 +76,6 @@ def test_ppo_learns_best_action():
 
 def test_oracle_prefers_low_rank_on_lowrank_data():
     """If K is exactly rank-4, the oracle should not pay for rank 16."""
-    cfg = get_config("drrl-paper", reduced=True)
     rc = RankConfig(mode="drrl", rank_grid=(4, 8, 12, 16), beta=0.5,
                     gamma=0.05)
     b, s, h, d = 2, 32, 2, 16
