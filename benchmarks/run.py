@@ -72,6 +72,15 @@ def bench_fig5(quick=False):
     return us, derived
 
 
+def bench_serve(quick=False):
+    from benchmarks.serve_bench import run
+    res, us = _timed(run, quick=quick)
+    derived = (f"speedup={res['speedup']:.2f}x;"
+               f"engine_tok_s={res['engine']['tok_per_s']:.0f};"
+               f"p95_ms={res['engine']['p95_ms']:.1f}")
+    return us, derived
+
+
 def bench_roofline(quick=False):
     from benchmarks.roofline import load_all
     t0 = time.monotonic()
@@ -111,6 +120,7 @@ BENCHES = {
     "fig3": bench_fig3,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 

@@ -1,6 +1,7 @@
-"""Batched adaptive serving: the DR-RL policy re-picks the rank bucket every
-segment (paper section 4.5.2), the perturbation guardrail vetoes unsafe
-switches, and each bucket is a separately compiled executable.
+"""Batched adaptive serving: the DR-RL policy re-picks each stream's rank
+bucket every segment (paper section 4.5.2), the perturbation guardrail
+vetoes unsafe switches per slot, and heterogeneous ranks share ONE fused
+decode executable (factor padding + rank masking — see repro.serve).
 
     PYTHONPATH=src python examples/serve_adaptive.py --tokens 96
 """
@@ -48,10 +49,11 @@ def main():
                                  cfg.vocab_size)
     res = server.generate(prompts, args.tokens, segment_len=args.segment)
     print(f"decoded {res['tokens'].shape[1]} tokens x {args.batch} streams "
-          f"at {res['tok_per_s']:.1f} tok/s")
-    print(f"rank schedule (per token): {res['ranks']}")
-    print(f"compiled bucket executables: "
-          f"{sorted(k for k in server._exec if k is not None)} + full-rank")
+          f"at {res['tok_per_s']:.1f} tok/s "
+          f"(compile {res['compile_s']:.2f}s, prefill {res['prefill_s']:.2f}s)")
+    print(f"rank schedule (per step, per stream): {res['ranks']}")
+    buckets = sorted({r for step in res['ranks'] for r in step if r >= 0})
+    print(f"rank buckets exercised: {buckets} (one fused executable)")
 
 
 if __name__ == "__main__":

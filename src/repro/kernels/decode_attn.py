@@ -5,6 +5,13 @@ Grid: (batch*q_heads, kv_blocks) with running-softmax scratch accumulation —
 the split-KV pattern that keeps the MXU busy for long caches at batch decode.
 The cache factor dim may be the truncated rank r (DR-RL serving bucket) or
 the full head dim.
+
+``kv_len`` may be a scalar (lock-step batch) or a per-row (b,) vector — the
+continuous-batching engine (repro.serve) decodes heterogeneous streams in
+one executable, so every batch row carries its own valid prefix length.
+Per-row *rank* needs no kernel support: the engine pads the q/k factors to
+the widest bucket and zeroes the columns beyond each row's rank, which
+leaves the score contraction exact (adding 0.0 terms).
 """
 from __future__ import annotations
 
@@ -19,10 +26,10 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-                   *, scale: float, block_k: int):
+                   *, scale: float, block_k: int, hq: int):
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
-    kv_len = len_ref[0]
+    kv_len = len_ref[pl.program_id(0) // hq]
 
     @pl.when(ki == 0)
     def _init():
@@ -61,7 +68,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                    static_argnames=("scale", "block_k", "interpret"))
 def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
                  interpret: bool = False):
-    """q: (b, hq, r); k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: ().
+    """q: (b, hq, r); k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: () or (b,).
     Returns (b, hq, dv)."""
     b, hq, r = q.shape
     hkv, M, dv = k.shape[1], k.shape[2], v.shape[3]
@@ -76,10 +83,11 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
     qf = q.reshape(b * hq, 1, r)
     kf = k.reshape(b * hkv, M_p, r)
     vf = v.reshape(b * hkv, M_p, dv)
-    lens = jnp.broadcast_to(jnp.reshape(kv_len, (1,)), (1,)).astype(jnp.int32)
+    lens = jnp.broadcast_to(jnp.reshape(kv_len, (-1,)), (b,)).astype(jnp.int32)
 
     grid = (b * hq, M_p // block_k)
-    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               hq=hq)
     out = pl.pallas_call(
         kernel,
         grid=grid,

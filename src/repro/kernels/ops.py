@@ -30,7 +30,8 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 
 def decode_attention(q, k, v, kv_len, *, scale: float, block_k: int = 512,
                      interpret=None):
-    """Flash-decode; see repro.kernels.ref.decode_ref."""
+    """Flash-decode; kv_len may be () or per-row (b,).
+    See repro.kernels.ref.decode_ref."""
     if interpret is None:
         interpret = _on_cpu()
     return flash_decode(q, k, v, kv_len, scale=scale, block_k=block_k,

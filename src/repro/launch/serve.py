@@ -1,16 +1,19 @@
-"""Adaptive serving loop with DR-RL bucketed rank dispatch.
+"""Adaptive serving front-end.
 
-The paper's segment-level adaptation (section 4.5.2) on TPU: a small grid of
-rank buckets is compiled ahead of time (static shapes); every ``segment_len``
-decoded tokens the policy re-evaluates the spectral features of the live KV
-cache and picks the bucket for the next segment. The perturbation guardrail
-(Eq. 9-11) masks unsafe bucket switches. Incremental subspace extension
-(Eq. 12) refreshes the eigenbasis when the rank is raised.
+The decode stack lives in ``repro.serve`` (continuous-batching engine with
+a slot-paged KV cache and per-slot dynamic ranks); ``AdaptiveServer`` is a
+thin compatibility wrapper that keeps the historical lock-step API: a
+(b, s0) prompt batch becomes b concurrent engine streams admitted at step
+0, decoded greedily for ``n_tokens`` each.
+
+Throughput accounting: ``generate`` warms the engine's executables first
+and reports their first-use compilation separately (``compile_s``), so
+``tok_per_s`` measures warm decode steps only (prefill time is also
+excluded, as before).
 """
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Dict, Optional
 
 import jax
@@ -19,120 +22,71 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
-from repro.core import lowrank as lr
-from repro.core import perturbation as pert
 from repro.models.api import get_model
+from repro.serve import Request, ServeEngine
 
 
 class AdaptiveServer:
-    """Batched decode server with per-segment rank re-decision."""
+    """Batched decode server with per-segment, per-stream rank re-decision.
+
+    Compatibility wrapper over :class:`repro.serve.ServeEngine`; compiled
+    executables are cached across ``generate`` calls with matching shapes.
+    """
 
     def __init__(self, cfg: ModelConfig, params, policy_params=None,
-                 max_len: int = 2048):
+                 max_len: int = 2048, page_size: int = 16,
+                 use_kernel: bool = False, time_per_token: bool = False):
         self.cfg = cfg
-        self.fns = get_model(cfg)
         self.params = params
         self.policy = policy_params
         self.max_len = max_len
-        self.rank_grid = cfg.rank.rank_grid
-        # one compiled executable per rank bucket (static realisation) + full
-        self._exec: Dict[Optional[int], callable] = {}
-        self.current_rank: Optional[int] = None
-        self.t = 0                      # RL global step for the annealed eps
+        self.page_size = page_size
+        self.use_kernel = use_kernel
+        self.time_per_token = time_per_token
+        self._engines: Dict[tuple, ServeEngine] = {}
 
-    def _step_fn(self, rank: Optional[int]):
-        if rank in self._exec:
-            return self._exec[rank]
-        cfg = self.cfg
-        if rank is not None:
-            cfg = cfg.with_(rank=cfg.rank.__class__(
-                mode="fixed", realisation="static", static_rank=rank,
-                fixed_rank=rank, rank_grid=cfg.rank.rank_grid))
+    def _engine(self, n_slots: int, seg: int, max_new: int) -> ServeEngine:
+        key = (n_slots, seg, max_new)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = ServeEngine(self.cfg, self.params, self.policy,
+                              n_slots=n_slots, max_len=self.max_len,
+                              page_size=self.page_size, segment_len=seg,
+                              max_new_cap=max_new,
+                              use_kernel=self.use_kernel,
+                              time_per_token=self.time_per_token)
+            self._engines[key] = eng
         else:
-            cfg = cfg.with_(rank=cfg.rank.__class__(mode="off"))
-        fns = get_model(cfg)
-        fn = jax.jit(lambda p, c, t: fns.decode_step(p, c, t))
-        self._exec[rank] = fn
-        return fn
-
-    def _decide_rank(self, cache) -> Optional[int]:
-        """Segment-level decision from the live cache spectra (cheap: Gram
-        eigenvalues of the newest layer-0 K cache)."""
-        rcfg = self.cfg.rank
-        if rcfg.mode == "off":
-            return None
-        k = cache["k"][0]                       # (b, M, hkv, d)
-        kv_len = int(cache["len"])
-        if kv_len < 8:
-            return int(self.rank_grid[-1])
-        kk = k[:, :kv_len].swapaxes(1, 2)       # (b, hkv, n, d)
-        s2, _ = lr.gram_spectrum(lr.gram(kk))
-        if rcfg.mode == "fixed":
-            return int(rcfg.fixed_rank)
-        grid_arr = np.asarray(self.rank_grid)
-        if rcfg.mode == "adaptive":
-            r = lr.rank_for_energy(s2, rcfg.energy_threshold,
-                                   self.rank_grid[0], self.rank_grid[-1])
-            med = float(np.median(np.asarray(r)))
-            # snap to the nearest bucket in the compiled grid
-            chosen = int(grid_arr[np.argmin(np.abs(grid_arr - med))])
-        elif rcfg.mode == "drrl" and self.policy is not None:
-            from repro.core.drrl import build_features
-            from repro.core.policy import policy_apply
-            b, h = s2.shape[:2]
-            h_t = jnp.zeros((b, 8), jnp.float32)
-            w_t = jnp.zeros((9,), jnp.float32)
-            prev = jnp.full((b, h), self.current_rank or self.rank_grid[-1],
-                            jnp.int32)
-            ctx = {"k_s2": s2, "q_s2": s2}
-            feats, (_, _, bounds_rel, _) = build_features(
-                rcfg, ctx, h_t, w_t, 0, prev)
-            logits, _ = policy_apply(self.policy, feats)
-            eps_t = pert.annealed_threshold(rcfg.epsilon0, rcfg.anneal_lambda,
-                                            self.t)
-            ok = pert.safety_mask(bounds_rel.reshape(logits.shape), eps_t)
-            logits = jnp.where(ok, logits, -1e30)
-            chosen = int(self.rank_grid[int(jnp.argmax(jnp.mean(logits, 0)))])
-        else:
-            chosen = int(np.random.default_rng(self.t).choice(self.rank_grid))
-        # guardrail on the *transition* (Eq. 9): veto switches whose bound
-        # exceeds the annealed threshold
-        if self.current_rank is not None and chosen != self.current_rank:
-            grid = list(self.rank_grid)
-            bounds, norm = pert.guardrail_report(s2, s2, tuple(grid),
-                                                 k.shape[-1])
-            rel = bounds / jnp.maximum(norm[..., None], 1e-30)
-            eps_t = float(pert.annealed_threshold(
-                rcfg.epsilon0, rcfg.anneal_lambda, self.t))
-            if float(jnp.mean(rel[..., grid.index(chosen)])) > eps_t:
-                chosen = self.current_rank
-        return chosen
+            eng.reset()
+        return eng
 
     def generate(self, prompts: jnp.ndarray, n_tokens: int,
                  segment_len: Optional[int] = None) -> Dict:
-        """prompts: (b, s0) int32. Greedy decode n_tokens."""
+        """prompts: (b, s0) int32. Greedy decode of n_tokens per stream.
+
+        Returns tokens (b, n_tokens), the per-step per-stream rank record,
+        warm-decode ``tok_per_s`` and the separated ``compile_s`` /
+        ``prefill_s`` costs."""
         seg = segment_len or self.cfg.rank.segment_len
-        b = prompts.shape[0]
-        cache = self.fns.init_cache(b, self.max_len)
-        full = self._step_fn(None)
-        logits, cache = full(self.params, cache, prompts)   # prefill
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [tok]
-        ranks_used = []
-        t0 = time.monotonic()
-        for i in range(n_tokens - 1):
-            if i % seg == 0:
-                self.current_rank = self._decide_rank(cache)
-                self.t += 1
-            ranks_used.append(self.current_rank or -1)
-            step = self._step_fn(self.current_rank)
-            logits, cache = step(self.params, cache, tok)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            out.append(tok)
-        dt = time.monotonic() - t0
-        return {"tokens": jnp.concatenate(out, axis=1),
-                "ranks": ranks_used,
-                "tok_per_s": b * (n_tokens - 1) / max(dt, 1e-9)}
+        prompts_np = np.asarray(prompts, np.int32)
+        b = prompts_np.shape[0]
+        eng = self._engine(b, seg, n_tokens)
+        for i in range(b):
+            eng.submit(Request(rid=i, tokens=prompts_np[i],
+                               max_new=n_tokens))
+        eng.warmup()
+        outs = eng.run()
+        tokens = np.stack([outs[i] for i in range(b)])
+        s = eng.stats
+        return {
+            "tokens": jnp.asarray(tokens),
+            "ranks": [r.tolist() for r in eng.ranks_per_step()],
+            "tok_per_s": s["tokens_decoded"] / max(s["decode_s"], 1e-9),
+            "compile_s": s["compile_s"],
+            "prefill_s": s["prefill_s"],
+            "token_lat_s": list(eng.token_latencies),   # [] unless timed
+            "stats": dict(s),
+        }
 
 
 def main(argv=None):
@@ -151,13 +105,15 @@ def main(argv=None):
     if cfg.rank.mode == "drrl":
         from repro.core.drrl import init_agent
         policy = init_agent(jax.random.PRNGKey(7), cfg.rank, cfg.d_model)
-    server = AdaptiveServer(cfg, params, policy, max_len=args.prompt_len + args.tokens + 8)
+    server = AdaptiveServer(cfg, params, policy,
+                            max_len=args.prompt_len + args.tokens + 8)
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     res = server.generate(prompts, args.tokens, segment_len=16)
-    print(f"decoded {res['tokens'].shape} at {res['tok_per_s']:.1f} tok/s; "
-          f"rank schedule: {res['ranks'][:16]}...")
+    print(f"decoded {res['tokens'].shape} at {res['tok_per_s']:.1f} tok/s "
+          f"(compile {res['compile_s']:.2f}s, prefill {res['prefill_s']:.2f}s); "
+          f"per-slot rank schedule: {res['ranks'][:8]}...")
 
 
 if __name__ == "__main__":

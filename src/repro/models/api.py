@@ -5,7 +5,7 @@ Every assigned architecture runs through this interface; the launch layer
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +20,9 @@ class ModelFns(NamedTuple):
     init_cache: Callable[..., Any]              # (batch, max_len) -> cache
     decode_step: Callable[..., Any]             # (params, cache, tokens) -> (logits, cache)
     input_specs: Callable[[ShapeCell], Dict[str, Any]]
+    # continuous-batching fused step over a slot-paged cache (repro.serve);
+    # None for families the serving engine does not cover yet
+    decode_step_paged: Optional[Callable[..., Any]] = None
 
 
 def get_model(cfg: ModelConfig) -> ModelFns:
@@ -89,6 +92,9 @@ def _dense_fns(cfg: ModelConfig) -> ModelFns:
         decode_step=lambda params, cache, tokens, **kw:
             tr.decode_step_dense(cfg, params, cache, tokens, **kw),
         input_specs=input_specs,
+        decode_step_paged=(None if cfg.mrope else
+                           lambda params, *a, **kw:
+                           tr.decode_step_paged(cfg, params, *a, **kw)),
     )
 
 

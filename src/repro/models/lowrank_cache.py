@@ -43,10 +43,37 @@ def init_lowrank_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def attention_mass(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Per-key attention mass of the prompt's causal self-attention,
+    averaged over queries and over the q-heads of each kv group.
+
+    q: (L, b, s, hq, d); k: (L, b, s, hkv, d). Returns (L, b, hkv, s)
+    normalised so the weights sum to s (scale-free for eigenvectors, but
+    keeps the weighted Gram's trace comparable to the plain one)."""
+    L, b, s, hq, dh = q.shape
+    hkv = k.shape[3]
+    kr = jnp.repeat(k, hq // hkv, axis=3) if hq != hkv else k
+    sc = jnp.einsum("lbqhd,lbkhd->lbhqk", q.astype(jnp.float32),
+                    kr.astype(jnp.float32)) * dh ** -0.5
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    sc = jnp.where(causal[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    w = jnp.mean(p, axis=3)                        # mean over queries
+    w = w.reshape(L, b, hkv, hq // hkv, s).mean(3)
+    return w * s / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+
+
 def prefill_lowrank(cfg: ModelConfig, params, tokens: jnp.ndarray,
-                    cache: Dict, rank: int) -> Tuple[jnp.ndarray, Dict]:
+                    cache: Dict, rank: int, *,
+                    weighted: bool = True) -> Tuple[jnp.ndarray, Dict]:
     """Run the prompt through the model, build per-(layer, head) bases from
     the prompt K-Grams, and store the truncated cache.
+
+    ``weighted=True`` uses the softmax-weighted Gram G = K^T diag(w) K with
+    w the prompt's per-key attention mass: the basis concentrates on the
+    directions that actually receive score mass, instead of K's raw energy
+    (which can sit where Q never looks — the failure mode recorded in
+    ROADMAP for the plain prompt-K basis).
 
     Returns (last-token logits, filled cache)."""
     from repro.models import transformer as tr
@@ -61,7 +88,13 @@ def prefill_lowrank(cfg: ModelConfig, params, tokens: jnp.ndarray,
     qkv = aux["layers"]["qkv"]                     # k,v: (L, b, s, hkv, d)
     k, v = qkv["k"], qkv["v"]
     L, b, s, hkv, dh = k.shape
-    gk = lr.gram(jnp.moveaxis(k, 3, 2).reshape(L * b * hkv, s, dh))
+    if weighted:
+        w = attention_mass(qkv["q"], k)            # (L, b, hkv, s)
+        kf = k.astype(jnp.float32)
+        gk = jnp.einsum("lbshd,lbhs,lbshe->lbhde", kf, w, kf)
+        gk = gk.reshape(L * b * hkv, dh, dh)
+    else:
+        gk = lr.gram(jnp.moveaxis(k, 3, 2).reshape(L * b * hkv, s, dh))
     _, evecs = lr.gram_spectrum(gk)                # (Lbh, d, d)
     basis = evecs[..., :rank].reshape(L, b, hkv, dh, rank)
     kt = jnp.einsum("lbshd,lbhdr->lbshr", k.astype(jnp.float32), basis)

@@ -279,3 +279,130 @@ def decode_step_dense(cfg: ModelConfig, params, cache, tokens, *,
               if head is not None else
               jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype)))
     return logits, {"k": nk, "v": nv, "len": cache["len"] + s}
+
+
+def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
+                      tokens, *, slot_lens, slot_ranks=None, basis=None,
+                      active=None, use_kernel: bool = False):
+    """One fused decode step over every serving slot of a slot-paged cache
+    (repro.serve): heterogeneous streams share ONE executable.
+
+    pool_k/pool_v: (L, P, page_size, hkv, dh) shared page pools;
+    page_table: (n_slots, pages_per_slot) physical page ids (page 0 is the
+    scratch page); tokens: (n_slots, 1) int32; slot_lens: (n_slots,) valid
+    prefix length per slot BEFORE this token; slot_ranks: (n_slots,) rank
+    bucket per slot with basis (L, n_slots, hkv, dh, r_max) the per-slot
+    segment eigenbases (both None only for rank mode 'off'); active:
+    (n_slots,) bool — inactive rows write to the scratch page and their
+    logits are garbage the engine ignores.
+
+    Per-row dynamic shape is expressed statically: kv_len is a vector
+    consumed by the attention mask (or the per-row flash-decode kernel when
+    ``use_kernel``), and per-row rank is factor padding + rank masking —
+    q and the K view are projected onto the slot's cached segment basis
+    padded to r_max columns, with columns beyond the slot's rank zeroed, so
+    the widened score contraction only adds exact zeros. No spectral solve
+    happens here: the basis is refreshed by the segment decision (Eq. 12).
+
+    Returns (logits (n_slots, 1, V), (new_pool_k, new_pool_v)).
+    """
+    from repro.models.attention import attend
+    from repro.models.common import apply_rope, repeat_kv
+    if cfg.mrope:
+        raise ValueError("paged decode does not support M-RoPE streams")
+    if (slot_ranks is None) != (basis is None):
+        raise ValueError("slot_ranks and basis must be given together")
+    dtype = nn.dt(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    ns = tokens.shape[0]
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim()
+    d = cfg.d_model
+    n_rep = hq // hkv
+    ps = pool_k.shape[2]
+    M = page_table.shape[1] * ps
+    rcfg = cfg.rank
+    if active is None:
+        active = jnp.ones((ns,), bool)
+    positions = jnp.broadcast_to(slot_lens[:, None], (ns, 1))
+    # physical write coordinates for the new token (scratch for dead lanes)
+    pg = (slot_lens // ps)[:, None]
+    phys = jnp.where(active, jnp.take_along_axis(page_table, pg, axis=1)[:, 0], 0)
+    off = jnp.where(active, slot_lens % ps, 0)
+    kv_len = slot_lens + 1
+    valid = jnp.arange(M)[None, :] < kv_len[:, None]            # (ns, M)
+    score_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        cfg.softmax_dtype]
+    scale = dh ** -0.5
+    if slot_ranks is not None:
+        r_keep = basis.shape[-1]
+        col_ok = (jnp.arange(r_keep)[None, :]
+                  < jnp.minimum(slot_ranks, r_keep)[:, None]
+                  ).astype(jnp.float32)             # (ns, r_keep)
+
+    def body(x, xs):
+        lp, kp, vp, basis_l = xs
+        p = lp["attn"]
+        h = nn.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhf->bshf", h, p["wq"].reshape(d, hq, dh).astype(x.dtype))
+        k = jnp.einsum("bsd,dhf->bshf", h, p["wk"].reshape(d, hkv, dh).astype(x.dtype))
+        v = jnp.einsum("bsd,dhf->bshf", h, p["wv"].reshape(d, hkv, dh).astype(x.dtype))
+        if cfg.qkv_bias:
+            q = q + p["bq"].reshape(hq, dh).astype(x.dtype)
+            k = k + p["bk"].reshape(hkv, dh).astype(x.dtype)
+            v = v + p["bv"].reshape(hkv, dh).astype(x.dtype)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[phys, off].set(v[:, 0].astype(vp.dtype))
+        kg = kp[page_table].reshape(ns, M, hkv, dh)
+        vg = vp[page_table].reshape(ns, M, hkv, dh)
+        # stale page contents (freed + re-issued pages) must not leak into
+        # the projected factors: zero everything beyond the valid prefix
+        k_masked = kg * valid[:, :, None, None].astype(kg.dtype)
+        if rcfg.mode == "off" or slot_ranks is None:
+            q_use, k_use = q, k_masked
+        else:
+            # project onto the slot's cached segment eigenbasis; per-row
+            # rank = zeroed columns beyond the slot's bucket
+            b_l = basis_l * col_ok[:, None, None, :]     # (ns, hkv, d, r)
+            b_q = (jnp.repeat(b_l, n_rep, axis=1) if n_rep > 1 else b_l)
+            q_use = jnp.einsum("bshd,bhdr->bshr", q.astype(jnp.float32),
+                               b_q).astype(x.dtype)
+            k_use = jnp.einsum("bmhd,bhdr->bmhr", k_masked.astype(jnp.float32),
+                               b_l).astype(x.dtype)
+        if use_kernel:
+            from repro.kernels.ops import decode_attention
+            o = decode_attention(
+                jnp.swapaxes(q_use, 1, 2)[:, :, 0],      # (ns, hq, d)
+                jnp.swapaxes(k_use, 1, 2),               # (ns, hkv, M, d)
+                jnp.swapaxes(vg, 1, 2),                  # (ns, hkv, M, dh)
+                kv_len, scale=scale)[:, None]            # (ns, 1, hq, dh)
+        else:
+            o = attend(q_use, repeat_kv(k_use, n_rep), repeat_kv(vg, n_rep),
+                       scale=scale, causal=False,
+                       kv_len=kv_len[:, None, None, None],
+                       score_dtype=score_dtype)
+        x = x + jnp.einsum("bshf,hfd->bsd", o,
+                           p["wo"].reshape(hq, dh, d).astype(x.dtype))
+        if cfg.family == "moe" and cfg.moe is not None and "moe" in lp:
+            f, _ = moe_mod.moe_ffn(cfg, lp["moe"],
+                                   nn.rms_norm(x, lp["ln2"], cfg.rms_eps))
+        else:
+            f = nn.swiglu(nn.rms_norm(x, lp["ln2"], cfg.rms_eps),
+                          lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                          lp["ffn"]["w_down"])
+        return x + f, (kp, vp)
+
+    from repro.models.common import scan_or_unroll
+    basis_xs = (basis if basis is not None else
+                jnp.zeros((cfg.num_layers, ns, hkv, dh, 1), jnp.float32))
+    x, (nk, nv) = scan_or_unroll(
+        body, x, (params["layers"], pool_k, pool_v, basis_xs),
+        unroll=not cfg.scan_layers)
+    x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    logits = (jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+              if head is not None else
+              jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype)))
+    return logits, (nk, nv)

@@ -1,0 +1,14 @@
+"""Continuous-batching serving engine (paper section 4.5.2 at scale).
+
+- kv_cache:  slot-paged KV cache — a shared page pool + per-slot page
+             tables, per-slot valid lengths / rank buckets / eigenbasis.
+- scheduler: request queue, admission (prefill on free slots), eviction.
+- policy:    slot-indexed segment-level rank decision + eigenbasis refresh
+             (ported from the old AdaptiveServer._decide_rank, no host
+             syncs).
+- engine:    the step loop — one fused decode executable over all live
+             slots with per-row kv_len and per-row rank.
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.scheduler import Request, Scheduler

@@ -1,0 +1,332 @@
+"""Continuous-batching serving engine.
+
+One engine = one slot-paged KV cache + one scheduler + three executables:
+
+  * a length-bucketed **prefill** (full-rank lock-step decode over the
+    padded prompt; one compile per bucket, reused across requests),
+  * a slot-indexed **segment decision** (serve.policy) that re-picks a
+    boundary slot's rank bucket from its live layer-0 K spectra and
+    refreshes its cached per-layer eigenbasis — one executable, one
+    dispatch per boundary crossing,
+  * ONE fused **decode step** over all slots (models.transformer.
+    decode_step_paged): per-row kv_len, per-row rank via factor padding +
+    rank masking — heterogeneous streams never force a recompile.
+
+The step loop is host-side control only; lengths / ranks / tokens stay on
+device between steps (token values are synced per step only when a live
+request carries an ``eos_id``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import get_model
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.policy import basis_drift, make_decide_fn
+from repro.serve.scheduler import (Request, Scheduler, bucket_for,
+                                   prefill_buckets)
+
+
+class ServeEngine:
+    """Continuous-batching decode over ``n_slots`` concurrent streams."""
+
+    def __init__(self, cfg: ModelConfig, params, policy_params=None, *,
+                 n_slots: int = 4, max_len: int = 256, page_size: int = 16,
+                 segment_len: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_new_cap: int = 256, use_kernel: bool = False,
+                 drift_threshold: Optional[float] = None,
+                 time_per_token: bool = False):
+        self.cfg, self.params, self.policy = cfg, params, policy_params
+        self.seg = int(segment_len or cfg.rank.segment_len)
+        self.n_slots = n_slots
+        self.max_new_cap = max_new_cap
+        self.use_kernel = use_kernel
+        self.drift_threshold = drift_threshold
+        self.time_per_token = time_per_token
+        self.cache = PagedKVCache(cfg, n_slots, max_len, page_size)
+        self._buckets = tuple(buckets) if buckets else prefill_buckets(max_len)
+        self.sched = Scheduler(n_slots, self._buckets)
+        self.fns = get_model(cfg)
+        if self.fns.decode_step_paged is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged decode step")
+        pf_cfg = cfg.with_(rank=cfg.rank.__class__(mode="off"))
+        self._pf_fns = get_model(pf_cfg)
+        self._prefill = jax.jit(
+            lambda p, c, t: self._pf_fns.decode_step(p, c, t))
+        self._decide = (make_decide_fn(cfg, policy_params)
+                        if cfg.rank.mode != "off" else None)
+        self._step = jax.jit(self._step_impl)
+        self._drift = (jax.jit(basis_drift)
+                       if drift_threshold is not None else None)
+        self._reset_state()
+
+    def _reset_state(self):
+        ns = self.n_slots
+        self.tokens = jnp.zeros((ns, 1), jnp.int32)
+        # +1 scratch row: dead lanes park their garbage writes there
+        self.out_buf = jnp.zeros((ns + 1, self.max_new_cap), jnp.int32)
+        self.has_rank = np.zeros((ns,), bool)
+        self.force_decide = np.zeros((ns,), bool)
+        self.now = 0
+        # device-resident control state: pushed only on admission/eviction
+        # events (dirty flag), never per step — lens advances in-graph
+        self._dirty = True
+        self._pt_dev = None
+        self._active_dev = None
+        self._plen_dev = None
+        self._lens_dev = None
+        self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
+                      "steps": 0, "tokens_decoded": 0, "prefills": 0,
+                      "decides": 0}
+        self.rank_history: List[Tuple[int, jnp.ndarray, np.ndarray]] = []
+        # harvested at eviction: decode-step wall time per token (needs
+        # time_per_token=True) and first-token (prefill) latency per request
+        self.token_latencies: List[float] = []
+        self.first_token_s: List[float] = []
+
+    def reset(self):
+        """Clear all serving state but keep the compiled executables."""
+        cfg, c = self.cfg, self.cache
+        self.cache = PagedKVCache(cfg, self.n_slots, c.max_len, c.page_size,
+                                  n_pages=c.n_pages)
+        self.sched = Scheduler(self.n_slots, self._buckets)
+        self._reset_state()
+
+    # -- request plane ---------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new > self.max_new_cap:
+            raise ValueError(f"max_new {req.max_new} > engine cap "
+                             f"{self.max_new_cap}")
+        if (self.cache.pages_needed(len(req.tokens) + req.max_new)
+                > self.cache.pages_per_slot):
+            raise ValueError(
+                f"request needs {len(req.tokens) + req.max_new} cache "
+                f"positions but a slot holds only {self.cache.max_len}")
+        self.sched.submit(req)
+
+    def warmup(self) -> float:
+        """Compile (and run once, results discarded) every executable the
+        queued requests will need; the elapsed time lands in
+        stats['compile_s'] so throughput numbers stay compile-free."""
+        t0 = time.perf_counter()
+        ns = self.n_slots
+        need = {bucket_for(len(r.tokens), self._buckets)
+                for r in self.sched.pending}
+        for bucket in sorted(need):
+            c = self._pf_fns.init_cache(1, bucket)
+            lg, _ = self._prefill(self.params, c,
+                                  jnp.zeros((1, bucket), jnp.int32))
+            jax.block_until_ready(lg)
+        self._sync_control()
+        if self._decide is not None:
+            r, b = self._decide(self.cache.k_pool, self._pt_dev,
+                                self._lens_dev, self.cache.ranks,
+                                self.cache.basis, np.int32(0),
+                                np.bool_(False), np.int32(0))
+            jax.block_until_ready((r, b))
+        out = self._step(self.params, self.cache.k_pool, self.cache.v_pool,
+                         self._pt_dev, self.tokens, self._lens_dev,
+                         self.cache.ranks, self.cache.basis,
+                         jnp.zeros((ns,), bool), self.out_buf,
+                         self._plen_dev)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.stats["compile_s"] += dt
+        return dt
+
+    # -- data plane ------------------------------------------------------
+
+    def _step_impl(self, params, pool_k, pool_v, page_table, tokens, lens,
+                   ranks, basis, active, out_buf, prompt_lens):
+        ns = tokens.shape[0]
+        off = self.cfg.rank.mode == "off"
+        logits, (pool_k, pool_v) = self.fns.decode_step_paged(
+            params, pool_k, pool_v, page_table, tokens,
+            slot_lens=lens, slot_ranks=None if off else ranks,
+            basis=None if off else basis, active=active,
+            use_kernel=self.use_kernel)
+        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        tok = jnp.where(active[:, None], tok, tokens)     # greedy
+        row = jnp.where(active, jnp.arange(ns), ns)       # dead -> scratch row
+        out_idx = jnp.where(active, jnp.minimum(lens - prompt_lens + 1,
+                                                self.max_new_cap - 1), 0)
+        out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
+        lens = lens + active.astype(lens.dtype)
+        return pool_k, pool_v, tok, out_buf, lens
+
+    def _sync_control(self) -> None:
+        """Push host control state to device after admission/eviction; the
+        steady-state decode loop reuses these arrays without any transfer."""
+        if not self._dirty:
+            return
+        self._pt_dev = jnp.asarray(self.cache.page_table)
+        self._active_dev = jnp.asarray(
+            np.array([s.active for s in self.sched.slots]))
+        self._plen_dev = jnp.asarray(
+            np.array([s.prompt_len if s.active else 0
+                      for s in self.sched.slots], np.int32))
+        self._lens_dev = jnp.asarray(self.cache.lens, jnp.int32)
+        self._dirty = False
+
+    def _admit(self) -> List[int]:
+        placed = self.sched.admit(self.now, self.cache.allocate)
+        for slot, req, bucket in placed:
+            t0 = time.perf_counter()
+            s = len(req.tokens)
+            cache_pf = self._pf_fns.init_cache(1, bucket)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :s] = req.tokens
+            logits, cache_pf = self._prefill(self.params, cache_pf,
+                                             jnp.asarray(padded))
+            tok0 = jnp.argmax(logits[0, s - 1]).astype(jnp.int32)
+            self.cache.write_prefill(slot, cache_pf["k"][:, 0, :s],
+                                     cache_pf["v"][:, 0, :s])
+            self.tokens = self.tokens.at[slot, 0].set(tok0)
+            self.out_buf = self.out_buf.at[slot, 0].set(tok0)
+            st = self.sched.slots[slot]
+            st.n_out = 1
+            # a recycled slot must not inherit its previous occupant's
+            # rank state: first decision is veto-free, fresh clock
+            self.has_rank[slot] = False
+            self.force_decide[slot] = False
+            if req.eos_id is not None:
+                st.last_tok = int(tok0)
+            jax.block_until_ready(self.cache.k_pool)
+            dt = time.perf_counter() - t0
+            self.stats["prefill_s"] += dt
+            self.stats["prefills"] += 1
+            st.latencies.append(dt)               # first-token latency
+        if placed:
+            self._dirty = True
+        return [slot for slot, _, _ in placed]
+
+    def _maybe_decide(self) -> None:
+        if self._decide is None:
+            return
+        active = np.array([s.active for s in self.sched.slots])
+        at_seg = np.array([s.decode_i % self.seg == 0
+                           for s in self.sched.slots])
+        boundary = active & (at_seg | self.force_decide)
+        if not boundary.any():
+            return
+        self._sync_control()
+        # per-slot decision, slot index traced: streams hit segment
+        # boundaries on their own staggered clocks, so an all-slots batched
+        # decide would redo every slot's spectral solve at the union of
+        # boundaries — n_slots times the work a per-stream server pays.
+        # One dispatch per boundary crossing, one executable for all slots.
+        for i in np.nonzero(boundary)[0]:
+            st = self.sched.slots[i]
+            self.cache.ranks, self.cache.basis = self._decide(
+                self.cache.k_pool, self._pt_dev, self._lens_dev,
+                self.cache.ranks, self.cache.basis, np.int32(i),
+                np.bool_(self.has_rank[i]), np.int32(st.t))
+            st.t += 1
+            self.stats["decides"] += 1
+        self.has_rank |= boundary
+        self.force_decide &= ~boundary
+
+    def _check_drift(self, live: List[int]) -> None:
+        ns, ps = self.n_slots, self.cache.page_size
+        pos = np.maximum(self.cache.lens - 1, 0)
+        phys = self.cache.page_table[np.arange(ns), pos // ps]
+        k_tok = self.cache.k_pool[0][jnp.asarray(phys),
+                                     jnp.asarray(pos % ps)]
+        drift = np.asarray(self._drift(k_tok, self.cache.basis[0],
+                                       self.cache.ranks))
+        for i in live:
+            if self.has_rank[i] and drift[i] > self.drift_threshold:
+                self.force_decide[i] = True
+
+    def _evict_finished(self) -> None:
+        for i, st in enumerate(self.sched.slots):
+            if st.active and self.sched.should_evict(i):
+                outputs = np.asarray(self.out_buf[i, :st.n_out]).tolist()
+                if st.latencies:
+                    self.first_token_s.append(st.latencies[0])
+                    self.token_latencies.extend(st.latencies[1:])
+                self.sched.evict(i, self.cache.release, outputs)
+                self._dirty = True
+
+    def step(self) -> None:
+        """One engine iteration: admit -> decide -> fused decode -> evict."""
+        self._admit()
+        self._evict_finished()                    # max_new == 1 / instant EOS
+        live = [i for i, s in enumerate(self.sched.slots) if s.active]
+        if live:
+            # the timer starts before the segment decision: tokens decoded
+            # in a boundary step really do wait on the decide dispatch
+            t0 = time.perf_counter() if self.time_per_token else None
+            self._maybe_decide()
+            self._sync_control()
+            self.rank_history.append(
+                (self.stats["steps"], self.cache.ranks,
+                 np.array([s.active for s in self.sched.slots])))
+            pk, pv, tok, ob, lens = self._step(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
+                self.cache.basis, self._active_dev, self.out_buf,
+                self._plen_dev)
+            self.cache.k_pool, self.cache.v_pool = pk, pv
+            self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
+            dt = None
+            if self.time_per_token:
+                jax.block_until_ready(tok)
+                dt = time.perf_counter() - t0
+            need_tok = any(self.sched.slots[i].req.eos_id is not None
+                           for i in live)
+            tok_host = np.asarray(tok[:, 0]) if need_tok else None
+            for i in live:
+                st = self.sched.slots[i]
+                st.decode_i += 1
+                st.n_out += 1
+                self.cache.lens[i] += 1           # host mirror of _lens_dev
+                if tok_host is not None:
+                    st.last_tok = int(tok_host[i])
+                if dt is not None:
+                    st.latencies.append(dt)
+            self.stats["steps"] += 1
+            self.stats["tokens_decoded"] += len(live)
+            if self._drift is not None:
+                self._check_drift(live)
+            self._evict_finished()
+        self.now += 1
+
+    def run(self, max_steps: Optional[int] = None) -> Dict:
+        """Drive the loop until every request finished. Returns
+        {rid: np.ndarray of generated tokens}."""
+        p0 = self.stats["prefill_s"]
+        t0 = time.perf_counter()
+        steps = 0
+        while not self.sched.done():
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        jax.block_until_ready(self.out_buf)
+        wall = time.perf_counter() - t0
+        self.stats["decode_s"] += max(
+            wall - (self.stats["prefill_s"] - p0), 0.0)
+        return self.results()
+
+    def results(self) -> Dict[int, np.ndarray]:
+        return {req.rid: np.asarray(out, np.int32)
+                for req, out in self.sched.finished}
+
+    def ranks_per_step(self) -> List[np.ndarray]:
+        """Host copy of the per-step (ranks, active) record; -1 marks dead
+        lanes AND full-rank decode (rank mode 'off'), where the cache's
+        r_max placeholder is not a real bucket."""
+        if self.cfg.rank.mode == "off":
+            return [np.full(a.shape, -1) for _, _, a in self.rank_history]
+        return [np.where(a, np.asarray(r), -1)
+                for _, r, a in self.rank_history]

@@ -1,0 +1,140 @@
+"""Slot-paged KV cache for the continuous-batching engine.
+
+Layout: one shared physical page pool per layer stack,
+
+    k_pool, v_pool: (L, n_pages, page_size, hkv, dh)
+
+plus a per-slot page table ``(n_slots, pages_per_slot)`` of physical page
+ids. A *slot* is a decode lane in the fused step executable; a slot's
+logical sequence dim is the concatenation of its pages, so admission only
+needs ``ceil(need / page_size)`` free pages anywhere in the pool — no
+contiguous-region allocation, no per-request max_len reservation in one
+monolithic ``{"k","v","len"}`` buffer.
+
+Physical page 0 is reserved as a scratch page: inactive slots point every
+page-table entry at it, so the fused step (which always runs all n_slots
+rows — static shapes) can scatter its dead-lane writes somewhere harmless
+instead of corrupting pages that were freed and re-issued to live streams.
+
+Per-slot serving state carried here besides the pool:
+  * ``lens``   — host-mirrored valid prefix length per slot (int64 np);
+                 the device copy is an input of every fused step, so the
+                 decode loop never does an ``int(cache["len"])`` sync.
+  * ``ranks``  — per-slot rank bucket, device-resident (jnp int32).
+  * ``basis``  — per-slot per-layer K eigenbasis (top r_max columns) from
+                 the last segment decision. The fused decode step projects
+                 q and the K view onto this cached basis (factor padding +
+                 per-row rank masking), so the eigh cost is paid once per
+                 segment — paper Eq. 12's refresh — and the layer-0 slice
+                 also feeds the drift trigger.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.configs.base import ModelConfig
+
+
+class PagedKVCache:
+    """Page pool + page tables + per-slot serving state."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 page_size: int = 16, n_pages: Optional[int] = None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_len // page_size)
+        self.max_len = self.pages_per_slot * page_size   # logical view M
+        # +1 for the reserved scratch page 0
+        self.n_pages = (n_pages if n_pages is not None
+                        else n_slots * self.pages_per_slot + 1)
+        dtype = nn.dt(cfg.dtype)
+        dh = cfg.resolved_head_dim()
+        L, hkv = cfg.num_layers, cfg.num_kv_heads
+        self.k_pool = jnp.zeros((L, self.n_pages, page_size, hkv, dh), dtype)
+        self.v_pool = jnp.zeros((L, self.n_pages, page_size, hkv, dh), dtype)
+        self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self._free: List[int] = list(range(self.n_pages - 1, 0, -1))  # not 0
+        self.lens = np.zeros((n_slots,), np.int64)
+        r_max = int(cfg.rank.rank_grid[-1]) if cfg.rank.mode != "off" else dh
+        self.ranks = jnp.full((n_slots,), r_max, jnp.int32)
+        self.basis = jnp.zeros((L, n_slots, hkv, dh, min(r_max, dh)),
+                               jnp.float32)
+
+    # -- host-side page accounting --------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, total_len: int) -> int:
+        return -(-total_len // self.page_size)
+
+    def allocate(self, slot: int, total_len: int) -> bool:
+        """Reserve pages covering ``total_len`` tokens for ``slot``.
+        Returns False (no mutation) when the pool can't cover it."""
+        need = self.pages_needed(total_len)
+        if need > self.pages_per_slot or need > len(self._free):
+            return False
+        pages = [self._free.pop() for _ in range(need)]
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :need] = pages
+        self.lens[slot] = 0
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return the slot's pages to the pool and park it on scratch."""
+        for p in self.page_table[slot]:
+            if p != 0:
+                self._free.append(int(p))
+        self.page_table[slot, :] = 0
+        self.lens[slot] = 0
+
+    def live_pages(self) -> Dict[int, List[int]]:
+        """slot -> owned physical pages (for invariant checks)."""
+        return {s: [int(p) for p in row if p != 0]
+                for s, row in enumerate(self.page_table)}
+
+    # -- device-side prefill write --------------------------------------
+
+    def write_prefill(self, slot: int, k_layers: jnp.ndarray,
+                      v_layers: jnp.ndarray) -> None:
+        """Scatter a prefilled (L, s, hkv, dh) K/V run into the slot's pages
+        and set its length. Control-plane op (one dispatch per admission)."""
+        s = k_layers.shape[1]
+        pos = np.arange(s)
+        phys = jnp.asarray(self.page_table[slot][pos // self.page_size])
+        off = jnp.asarray(pos % self.page_size)
+        self.k_pool = self.k_pool.at[:, phys, off].set(
+            k_layers.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[:, phys, off].set(
+            v_layers.astype(self.v_pool.dtype))
+        self.lens[slot] = s
+
+    # -- logical views ---------------------------------------------------
+
+    def gather_slot(self, slot: int):
+        """(L, max_len, hkv, dh) contiguous K/V view of one slot (testing /
+        debugging; the fused step gathers all slots in-graph)."""
+        pt = jnp.asarray(self.page_table[slot])
+        def view(pool):
+            g = pool[:, pt]                           # (L, pages, ps, hkv, dh)
+            return g.reshape(g.shape[0], -1, *g.shape[3:])
+        return view(self.k_pool), view(self.v_pool)
+
+
+def gather_views(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                 page_table: jnp.ndarray):
+    """In-graph gather of every slot's logical K/V view.
+
+    k_pool/v_pool: (L, P, ps, hkv, dh); page_table: (n_slots, pages).
+    Returns (L, n_slots, M, hkv, dh) x2 with M = pages * ps."""
+    def view(pool):
+        g = pool[:, page_table]              # (L, n_slots, pages, ps, hkv, dh)
+        L, ns = g.shape[0], g.shape[1]
+        return g.reshape(L, ns, -1, *g.shape[4:])
+    return view(k_pool), view(v_pool)

@@ -1,0 +1,135 @@
+"""Per-slot segment-level rank decision (slot-indexed, device-resident).
+
+Port of the old ``AdaptiveServer._decide_rank`` (launch/serve.py) from a
+whole-batch host-side decision to a jitted slot-indexed call: the slot id
+is a traced scalar, so ONE executable serves every slot; ``gram_spectrum``
+runs over that slot's live K view for all layers, the guardrail veto and
+annealed threshold apply per slot — and crucially no ``int(cache["len"])``
+host syncs: lengths, previous ranks and bases live on device and the
+chosen rank/basis are written back with dynamic-index updates, feeding
+straight into the fused decode step's rank masks.
+
+Decision rules per slot (same semantics the lock-step server had):
+  * kv_len < 8            -> r_max (too little signal; no veto)
+  * mode == 'fixed'       -> fixed_rank
+  * mode == 'adaptive'    -> NER-threshold rank per head, median over heads,
+                             snapped to the compiled grid
+  * mode == 'drrl'        -> policy logits per (slot, head) with the Eq. 11
+                             safety mask, head-mean argmax per slot
+  * mode == 'random'      -> uniform grid draw keyed by the slot's clock
+  * transition veto       -> Eq. 9 relative bound at the chosen bucket vs
+                             the slot's annealed eps_t; veto keeps prev
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lowrank as lr
+from repro.core import perturbation as pert
+
+
+def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
+    """Returns jitted ``decide(k_pool, page_table, lens, ranks, basis,
+    slot, has_rank, t) -> (ranks', basis')``.
+
+    One call re-decides ONE slot (``slot`` is a traced scalar index — a
+    single executable serves every slot): it gathers that slot's pages,
+    takes the spectral solve for all layers, picks the rank bucket from the
+    layer-0 spectra (same rules the old lock-step server used), applies the
+    Eq. 9/11 transition veto, and writes the slot's new rank and per-layer
+    K eigenbasis back into the device-resident vectors with dynamic-index
+    updates. The fused decode step only *projects* onto the cached basis,
+    so the eigh cost is paid once per segment, not once per token (paper
+    Eq. 12's segment-level refresh) — and per-slot calls keep the spectral
+    work proportional to the number of boundary crossings, exactly what a
+    per-stream server would pay, instead of n_slots times the union.
+    """
+    rcfg = cfg.rank
+    if rcfg.mode == "off":
+        raise ValueError("decide fn is undefined for rank mode 'off'")
+    grid = jnp.asarray(rcfg.rank_grid, jnp.int32)
+    g_lo, g_hi = int(rcfg.rank_grid[0]), int(rcfg.rank_grid[-1])
+    dh = cfg.resolved_head_dim()
+    r_keep = min(g_hi, dh)
+
+    @jax.jit
+    def decide(k_pool, page_table, lens, ranks, basis, slot, has_rank, t):
+        pt_row = jax.lax.dynamic_slice_in_dim(page_table, slot, 1, 0)[0]
+        kv_len = jax.lax.dynamic_slice_in_dim(lens, slot, 1, 0)[0]
+        prev_rank = jax.lax.dynamic_slice_in_dim(ranks, slot, 1, 0)[0]
+        gathered = k_pool[:, pt_row]           # (L, pages, ps, h, d)
+        L = gathered.shape[0]
+        kv = gathered.reshape(L, -1, *gathered.shape[3:])
+        M = kv.shape[1]
+        valid = jnp.arange(M) < kv_len
+        kk = jnp.swapaxes(kv, 1, 2) * valid[None, None, :, None]  # (L,h,M,d)
+        s2_l, evecs_l = lr.gram_spectrum(lr.gram(kk))     # (L, h, d[, d])
+        s2 = s2_l[0]                 # layer-0 spectra drive the decision
+        h = s2.shape[0]
+        eps_t = pert.annealed_threshold(rcfg.epsilon0, rcfg.anneal_lambda, t)
+
+        if rcfg.mode == "fixed":
+            chosen = jnp.int32(rcfg.fixed_rank)
+        elif rcfg.mode == "adaptive":
+            r = lr.rank_for_energy(s2, rcfg.energy_threshold, g_lo, g_hi)
+            med = jnp.median(r.astype(jnp.float32))
+            chosen = grid[jnp.argmin(jnp.abs(grid.astype(jnp.float32) - med))]
+        elif rcfg.mode == "drrl" and policy_params is not None:
+            from repro.core.drrl import build_features
+            from repro.core.policy import policy_apply
+            h_t = jnp.zeros((1, 8), jnp.float32)
+            w_t = jnp.zeros((9,), jnp.float32)
+            prev = jnp.full((1, h), prev_rank, jnp.int32)
+            ctx = {"k_s2": s2[None], "q_s2": s2[None]}
+            feats, (_, _, bounds_rel, _) = build_features(
+                rcfg, ctx, h_t, w_t, 0, prev)
+            logits, _ = policy_apply(policy_params, feats)     # (h, G)
+            G = logits.shape[-1]
+            ok = pert.safety_mask(bounds_rel.reshape(-1, G), eps_t)
+            logits = jnp.where(ok, logits, -1e30)
+            chosen = grid[jnp.argmax(jnp.mean(logits, axis=0))]
+        else:                                     # 'random' (or drrl w/o pol)
+            key = jax.random.fold_in(jax.random.PRNGKey(17),
+                                     t.astype(jnp.int32))
+            chosen = grid[jax.random.randint(key, (), 0, grid.shape[0])]
+
+        # transition veto (Eq. 9): head-mean relative bound at the chosen
+        # bucket must clear the slot's annealed threshold
+        bounds, norm = pert.guardrail_report(s2, s2, rcfg.rank_grid, dh)
+        rel = jnp.mean(bounds / jnp.maximum(norm[..., None], 1e-30), axis=0)
+        rel_c = rel[jnp.argmin(jnp.abs(grid - chosen))]
+        switching = has_rank & (chosen != prev_rank)
+        chosen = jnp.where(switching & (rel_c > eps_t), prev_rank, chosen)
+        chosen = jnp.where(kv_len < 8, g_hi, chosen)
+
+        ranks = jax.lax.dynamic_update_slice_in_dim(
+            ranks, chosen[None], slot, 0)
+        basis = jax.lax.dynamic_update_slice(
+            basis, evecs_l[:, None, :, :, :r_keep],
+            (0, slot, 0, 0, 0))
+        return ranks, basis
+
+    return decide
+
+
+def basis_drift(k_tok: jnp.ndarray, basis: jnp.ndarray,
+                ranks: jnp.ndarray) -> jnp.ndarray:
+    """Residual energy of the newest K token outside each slot's stored
+    layer-0 eigenbasis (first ``rank`` columns): (n_slots,) in [0, 1]. High
+    drift means the segment's subspace went stale — the engine can trigger
+    an early re-decision instead of waiting out the segment.
+
+    k_tok: (n_slots, hkv, dh); basis: (n_slots, hkv, dh, r_keep)."""
+    r_keep = basis.shape[-1]
+    col_ok = (jnp.arange(r_keep)[None, :]
+              < jnp.minimum(ranks[:, None], r_keep)).astype(jnp.float32)
+    b = basis * col_ok[:, None, None, :]
+    kf = k_tok.astype(jnp.float32)
+    proj = jnp.einsum("shd,shdr,sher->she", kf, b, b)
+    num = jnp.sum((kf - proj) ** 2, axis=(1, 2))
+    den = jnp.maximum(jnp.sum(kf ** 2, axis=(1, 2)), 1e-30)
+    return num / den

@@ -1,0 +1,139 @@
+"""Request queue + slot admission/eviction for the serving engine.
+
+Control plane only: everything here is host-side Python over tiny arrays.
+The data plane (pools, fused step) lives in kv_cache.py / engine.py.
+
+Admission is FIFO over *arrived* requests: a request joins a free slot as
+soon as one exists, its arrival step has passed, and the page pool can
+cover ``prompt_len + max_new`` tokens. Prefill lengths are bucketed
+(powers of two by default) so the prefill executable compiles once per
+bucket, not once per prompt length. Eviction happens on EOS or when
+``max_new`` tokens have been decoded; the slot's pages return to the pool.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request. ``tokens`` is the prompt (1-D int array)."""
+    rid: int
+    tokens: np.ndarray
+    max_new: int
+    arrival: int = 0                 # engine step at which it may be admitted
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+
+@dataclass
+class SlotState:
+    req: Optional[Request] = None
+    prompt_len: int = 0
+    decode_i: int = 0      # fused decode steps taken for this stream
+    t: int = 0             # segment counter (annealed-threshold clock)
+    n_out: int = 0         # tokens produced so far (prefill token included)
+    last_tok: Optional[int] = None   # synced from device only when eos_id set
+    # wall-clock per-token latencies (filled by the engine when timing)
+    latencies: List[float] = field(default_factory=list)
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+def prefill_buckets(max_prompt: int, floor: int = 8) -> Tuple[int, ...]:
+    """Power-of-two length buckets covering [1, max_prompt]."""
+    out, b = [], floor
+    while b < max_prompt:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
+
+
+def bucket_for(length: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+class Scheduler:
+    """FIFO admission over n_slots decode lanes."""
+
+    def __init__(self, n_slots: int, buckets: Sequence[int]):
+        self.n_slots = n_slots
+        self.buckets = tuple(buckets)
+        self.pending: Deque[Request] = deque()
+        self.slots = [SlotState() for _ in range(n_slots)]
+        self.finished: List[Tuple[Request, List[int]]] = []
+
+    def submit(self, req: Request) -> None:
+        bucket_for(len(req.tokens), self.buckets)   # validate early
+        self.pending.append(req)
+
+    # -- admission -------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def admit(self, now: int, can_allocate) -> List[Tuple[int, Request, int]]:
+        """Assign arrived requests to free slots, FIFO. ``can_allocate(slot,
+        total_len) -> bool`` is the page-pool reservation hook. Returns
+        [(slot, request, padded_prefill_bucket)]. A head-of-queue request
+        that cannot be placed (pages exhausted) blocks the queue — FIFO, no
+        starvation via overtaking."""
+        placed = []
+        free = self.free_slots()
+        while free and self.pending and self.pending[0].arrival <= now:
+            req = self.pending[0]
+            slot = free[0]
+            if not can_allocate(slot, len(req.tokens) + req.max_new):
+                break
+            self.pending.popleft()
+            free.pop(0)
+            st = self.slots[slot]
+            st.req, st.prompt_len = req, len(req.tokens)
+            st.decode_i, st.t = 0, 0
+            st.n_out, st.last_tok = 0, None
+            st.latencies = []
+            placed.append((slot, req, bucket_for(len(req.tokens), self.buckets)))
+        return placed
+
+    # -- eviction --------------------------------------------------------
+
+    def should_evict(self, slot: int) -> bool:
+        st = self.slots[slot]
+        if not st.active:
+            return False
+        if st.n_out >= st.req.max_new:
+            return True
+        eos = st.req.eos_id
+        return eos is not None and st.last_tok == eos
+
+    def evict(self, slot: int, release, outputs: List[int]) -> Request:
+        """Finish the stream in ``slot``; ``release(slot)`` frees pages."""
+        st = self.slots[slot]
+        req = st.req
+        self.finished.append((req, list(outputs)))
+        release(slot)
+        st.req = None
+        return req
+
+    def n_live(self) -> int:
+        return sum(s.active for s in self.slots)
+
+    def done(self) -> bool:
+        return not self.pending and self.n_live() == 0

@@ -66,6 +66,36 @@ def test_decode_vs_ref(case, dtype):
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_per_row_kv_len(dtype):
+    """Continuous-batching form: every batch row carries its own valid
+    prefix length (and, via zeroed factor columns, its own rank)."""
+    b, hq, hkv, M, r, dv = 4, 4, 2, 96, 16, 32
+    ks = jax.random.split(K0, 3)
+    q = _rand((b, hq, r), ks[0], dtype)
+    k = _rand((b, hkv, M, r), ks[1], dtype)
+    v = _rand((b, hkv, M, dv), ks[2], dtype)
+    lens = jnp.asarray([1, 17, 96, 40], jnp.int32)
+    # per-row rank masking: rows truncate their factors differently
+    ranks = jnp.asarray([4, 8, 16, 12], jnp.int32)
+    col_ok = jnp.arange(r)[None, :] < ranks[:, None]
+    q = q * col_ok[:, None, :]
+    k = k * col_ok[:, None, None, :]
+    out = decode_attention(q, k, v, lens, scale=r ** -0.5, block_k=32,
+                           interpret=True)
+    ref = decode_ref(q, k, v, lens, scale=r ** -0.5)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+    # row i must equal a solo decode at its own length
+    for i in (0, 1, 3):
+        solo = decode_ref(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                          jnp.int32(int(lens[i])), scale=r ** -0.5)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1], np.float32),
+                                   np.asarray(solo, np.float32),
+                                   atol=tol, rtol=tol)
+
+
 def test_flash_q_offset_matches_decode_semantics():
     """flash with q_offset == suffix rows of the full causal result."""
     b, h, s, d = 1, 2, 32, 16

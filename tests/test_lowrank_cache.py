@@ -3,7 +3,6 @@ high-fidelity at r = d/2, and the cache factor really is r-dimensional."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as tr
@@ -24,12 +23,10 @@ def _run(cfg, params, toks, nxt, rank):
     return jnp.stack(outs, 1), cache
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="half-rank top-1 agreement lands at 0.75 < 0.8 at this toy "
-           "scale (logits cosine 0.997, full rank exact) — pre-existing "
-           "quality gap in the prompt-K Gram basis; see ROADMAP open items")
 def test_lowrank_cache_decode():
+    # the softmax-weighted Gram basis (attention-mass-weighted prompt-K
+    # Gram) lifts half-rank top-1 agreement 0.75 -> 0.83 at this toy scale,
+    # clearing the 0.8 bar that the plain prompt-K basis missed
     cfg = get_config("qwen2.5-14b", reduced=True)
     params = tr.init_dense(cfg, RNG)
     fns = get_model(cfg)

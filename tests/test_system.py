@@ -90,9 +90,11 @@ def test_adaptive_server_rank_dispatch():
     prompts = jax.random.randint(RNG, (2, 16), 0, cfg.vocab_size)
     res = server.generate(prompts, 24, segment_len=8)
     assert res["tokens"].shape == (2, 24)
-    used = set(res["ranks"])
-    assert used <= set(cfg.rank.rank_grid) | {-1, None}
+    # per-step per-stream rank record: 23 fused steps, both streams live
     assert len(res["ranks"]) == 23
+    used = {r for step in res["ranks"] for r in step}
+    assert used <= set(cfg.rank.rank_grid) | {-1}
+    assert res["compile_s"] > 0.0 and res["tok_per_s"] > 0.0
 
 
 def test_grad_accumulation_matches_single_batch():
