@@ -14,6 +14,13 @@ Both sides are warmed first; compilation is reported separately and
 excluded from throughput. Emits aggregate tok/s and p50/p95 per-token
 decode latency as JSON to BENCH_serve.json.
 
+A third section compares the **factor-form paged K cache** (kt = K . B_r)
+against the dense paged path: token parity is asserted at full rank, and
+the score-contraction read bytes per decoded token are recorded for a
+low-rank serving grid (r_max/d of the dense K bytes; the wall-clock gap
+only opens on accelerators where decode is KV-bandwidth bound — CPU toy
+scale is dispatch-bound).
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
 from __future__ import annotations
@@ -32,6 +39,64 @@ def build_workload(n_requests: int, max_new: int, seed: int = 0):
     return [dict(rid=i, tokens=rnd.integers(0, 256, int(s)).astype(np.int32),
                  max_new=max_new, arrival=2 * i)
             for i, s in enumerate(lens)]
+
+
+def factor_compare(cfg, params, workload, n_slots: int, max_len: int):
+    """Factored vs dense paged decode.
+
+    Runs the same workload through four engines: a full-rank pair whose
+    token outputs must be IDENTICAL (the factor path changes the memory
+    layout, not the math), and a low-rank pair (grid top = dh/2) whose
+    score-contraction read-bytes-per-token quantify the r/d bandwidth cut.
+    """
+    from repro.configs.base import RankConfig
+    from repro.serve import Request, ServeEngine
+
+    dh = cfg.resolved_head_dim()
+    hkv = cfg.num_kv_heads
+
+    def drive(rank_cfg, factor):
+        eng = ServeEngine(cfg.with_(rank=rank_cfg), params, n_slots=n_slots,
+                          max_len=max_len, page_size=16, segment_len=8,
+                          max_new_cap=max(w["max_new"] for w in workload),
+                          factor_cache=factor)
+        for w in workload:
+            eng.submit(Request(**w))
+        eng.warmup()
+        outs = eng.run()
+        c = eng.cache
+        width = c.r_keep if factor else dh
+        itemsize = np.dtype(np.asarray(c.k_pool).dtype).itemsize
+        # score-contraction K-side read per decoded token: one gather of
+        # the slot's logical view (pages * page_size positions) per layer
+        read = cfg.num_layers * c.max_len * hkv * width * itemsize
+        return outs, {
+            "tok_per_s": eng.stats["tokens_decoded"]
+                         / max(eng.stats["decode_s"], 1e-9),
+            "k_read_bytes_per_token": read,
+        }
+
+    full = RankConfig(mode="fixed", rank_grid=(dh // 2, dh), fixed_rank=dh,
+                      segment_len=8)
+    outs_f, stats_f = drive(full, True)
+    outs_d, stats_d = drive(full, False)
+    parity = all(np.array_equal(outs_f[w["rid"]], outs_d[w["rid"]])
+                 for w in workload)
+    assert parity, "factored decode diverged from dense paged decode " \
+                   "at full rank"
+
+    low = RankConfig(mode="adaptive", rank_grid=(dh // 4, dh // 2),
+                     segment_len=8)
+    _, lo_f = drive(low, True)
+    _, lo_d = drive(low, False)
+    return {
+        "parity_full_rank": parity,
+        "full_rank": {"factored": stats_f, "dense": stats_d},
+        "low_rank": {"factored": lo_f, "dense": lo_d,
+                     "r_keep": dh // 2, "dh": dh,
+                     "read_ratio": lo_f["k_read_bytes_per_token"]
+                                   / lo_d["k_read_bytes_per_token"]},
+    }
 
 
 def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
@@ -130,6 +195,11 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "compile_s": seq_compile_s, "tokens_decoded": seq_tokens,
     }
 
+    # -- factor-form cache: parity + read bandwidth ---------------------
+    fc_workload = workload[:4] if not smoke else workload
+    factor_res = factor_compare(cfg, params, fc_workload,
+                                n_slots=min(n_slots, 4), max_len=max_len)
+
     out = {
         "workload": {"n_requests": n_requests, "max_new": max_new,
                      "prompt_lens": [len(w["tokens"]) for w in workload],
@@ -137,6 +207,7 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "engine": engine_res,
         "sequential": seq_res,
         "speedup": engine_res["tok_per_s"] / max(seq_res["tok_per_s"], 1e-9),
+        "factor_cache": factor_res,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     with open(out_path, "w") as f:
@@ -161,6 +232,12 @@ def main():
     print(f"sequential : {s['tok_per_s']:8.1f} tok/s  "
           f"p50 {s['p50_ms']:.1f} ms  p95 {s['p95_ms']:.1f} ms")
     print(f"speedup    : {res['speedup']:.2f}x  -> {args.out}")
+    fc = res["factor_cache"]
+    lo = fc["low_rank"]
+    print(f"factor     : parity@full-rank {fc['parity_full_rank']}  "
+          f"K-read/token {lo['factored']['k_read_bytes_per_token']}B vs "
+          f"{lo['dense']['k_read_bytes_per_token']}B dense "
+          f"(ratio {lo['read_ratio']:.2f} = r{lo['r_keep']}/d{lo['dh']})")
     if res["speedup"] <= 1.0 and not args.smoke:
         # --smoke is a does-it-run canary: 4 under-saturated requests,
         # single repeat — not a throughput measurement

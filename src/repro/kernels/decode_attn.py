@@ -4,14 +4,24 @@ rank-truncated) KV cache with a dynamic valid-prefix length.
 Grid: (batch*q_heads, kv_blocks) with running-softmax scratch accumulation —
 the split-KV pattern that keeps the MXU busy for long caches at batch decode.
 The cache factor dim may be the truncated rank r (DR-RL serving bucket) or
-the full head dim.
+the full head dim — the continuous-batching engine feeds the factor-form
+paged cache kt = K . B_r here, so the score contraction reads r/d of the
+dense K bytes.
 
 ``kv_len`` may be a scalar (lock-step batch) or a per-row (b,) vector — the
 continuous-batching engine (repro.serve) decodes heterogeneous streams in
 one executable, so every batch row carries its own valid prefix length.
-Per-row *rank* needs no kernel support: the engine pads the q/k factors to
+Per-row *rank* needs no kernel support: the engine pads the q factors to
 the widest bucket and zeroes the columns beyond each row's rank, which
 leaves the score contraction exact (adding 0.0 terms).
+
+``return_probs=True`` additionally emits the normalised attention row
+p (b, hq, M) of the new token: the serving engine accumulates per-key
+attention mass in-graph (the weighted-Gram basis input), and emitting p
+from the kernel's own running softmax avoids a second score pass over the
+cache. The row is accumulated unnormalised in a VMEM scratch strip,
+rescaled by the same exp(m_prev - m_new) correction as the output
+accumulator, and divided by the final denominator once.
 """
 from __future__ import annotations
 
@@ -25,8 +35,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-                   *, scale: float, block_k: int, hq: int):
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                   scale: float, block_k: int, hq: int, return_probs: bool):
+    if return_probs:
+        p_ref, m_scr, l_scr, acc_scr, p_scr = rest
+    else:
+        p_ref, p_scr = None, None
+        m_scr, l_scr, acc_scr = rest
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
     kv_len = len_ref[pl.program_id(0) // hq]
@@ -36,6 +51,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        if return_probs:
+            p_scr[...] = jnp.zeros_like(p_scr)
 
     k_start = ki * block_k
 
@@ -56,20 +73,27 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         acc_scr[...] = (acc_scr[...] * corr[:, None]
                         + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                                               preferred_element_type=jnp.float32))
+        if return_probs:
+            p_scr[...] = p_scr[...] * corr[:, None]
+            p_scr[0, pl.ds(k_start, block_k)] = p[0]
         m_scr[...] = m_new
 
     @pl.when(ki == n_k - 1)
     def _finalize():
-        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
-                    ).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        if return_probs:
+            p_ref[0] = (p_scr[...] / denom).astype(p_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "block_k", "interpret"))
+                   static_argnames=("scale", "block_k", "interpret",
+                                    "return_probs"))
 def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
-                 interpret: bool = False):
+                 interpret: bool = False, return_probs: bool = False):
     """q: (b, hq, r); k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: () or (b,).
-    Returns (b, hq, dv)."""
+    Returns (b, hq, dv), or ((b, hq, dv), (b, hq, M) probs) with
+    ``return_probs``."""
     b, hq, r = q.shape
     hkv, M, dv = k.shape[1], k.shape[2], v.shape[3]
     n_rep = hq // hkv
@@ -87,8 +111,19 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
 
     grid = (b * hq, M_p // block_k)
     kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
-                               hq=hq)
-    out = pl.pallas_call(
+                               hq=hq, return_probs=return_probs)
+    out_shape = [jax.ShapeDtypeStruct((b * hq, 1, dv), v.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, dv), lambda bh, ki: (bh, 0, 0))]
+    scratch = [
+        pltpu.VMEM((1,), jnp.float32),
+        pltpu.VMEM((1,), jnp.float32),
+        pltpu.VMEM((1, dv), jnp.float32),
+    ]
+    if return_probs:
+        out_shape.append(jax.ShapeDtypeStruct((b * hq, 1, M_p), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, M_p), lambda bh, ki: (bh, 0, 0)))
+        scratch.append(pltpu.VMEM((1, M_p), jnp.float32))
+    res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -99,13 +134,13 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
             pl.BlockSpec((1, block_k, dv),
                          lambda bh, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, dv), lambda bh, ki: (bh, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * hq, 1, dv), v.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, dv), jnp.float32),
-        ],
+        out_specs=out_specs if return_probs else out_specs[0],
+        out_shape=out_shape if return_probs else out_shape[0],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(lens, qf, kf, vf)
-    return out.reshape(b, hq, dv)
+    if return_probs:
+        o, p = res
+        return (o.reshape(b, hq, dv),
+                p.reshape(b, hq, M_p)[:, :, :M])
+    return res.reshape(b, hq, dv)

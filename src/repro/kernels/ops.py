@@ -29,10 +29,12 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 
 
 def decode_attention(q, k, v, kv_len, *, scale: float, block_k: int = 512,
-                     interpret=None):
-    """Flash-decode; kv_len may be () or per-row (b,).
+                     interpret=None, return_probs: bool = False):
+    """Flash-decode; kv_len may be () or per-row (b,). ``return_probs``
+    also returns the new token's normalised attention row (b, hq, M) for
+    the serving engine's attention-mass accumulator.
     See repro.kernels.ref.decode_ref."""
     if interpret is None:
         interpret = _on_cpu()
     return flash_decode(q, k, v, kv_len, scale=scale, block_k=block_k,
-                        interpret=interpret)
+                        interpret=interpret, return_probs=return_probs)

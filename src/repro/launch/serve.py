@@ -35,7 +35,8 @@ class AdaptiveServer:
 
     def __init__(self, cfg: ModelConfig, params, policy_params=None,
                  max_len: int = 2048, page_size: int = 16,
-                 use_kernel: bool = False, time_per_token: bool = False):
+                 use_kernel: bool = False, time_per_token: bool = False,
+                 factor_cache: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.policy = policy_params
@@ -43,6 +44,7 @@ class AdaptiveServer:
         self.page_size = page_size
         self.use_kernel = use_kernel
         self.time_per_token = time_per_token
+        self.factor_cache = factor_cache
         self._engines: Dict[tuple, ServeEngine] = {}
 
     def _engine(self, n_slots: int, seg: int, max_new: int) -> ServeEngine:
@@ -54,7 +56,8 @@ class AdaptiveServer:
                               page_size=self.page_size, segment_len=seg,
                               max_new_cap=max_new,
                               use_kernel=self.use_kernel,
-                              time_per_token=self.time_per_token)
+                              time_per_token=self.time_per_token,
+                              factor_cache=self.factor_cache)
             self._engines[key] = eng
         else:
             eng.reset()

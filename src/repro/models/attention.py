@@ -32,8 +32,12 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
            kv_len: Optional[jnp.ndarray] = None,
            chunked: bool = False, chunk: int = 1024,
            score_dtype=jnp.float32,
-           score_spec=None) -> jnp.ndarray:
+           score_spec=None, return_probs: bool = False) -> jnp.ndarray:
     """softmax(q k^T * scale) v.
+
+    ``return_probs`` also returns the probability tensor (b, h, sq, skv)
+    (the serving engine's attention-mass feed); unsupported on the
+    chunked path, which never materialises it.
 
     q: (b, sq, h, dq)  k: (b, skv, h, dq)  v: (b, skv, h, dv).
     ``dq`` may be a truncated rank r — the caller supplies the proper scale
@@ -47,6 +51,9 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     (sequence-parallel attention: P(dp, None, 'model', None)).
     """
     if chunked and k.shape[1] > chunk:
+        if return_probs:
+            raise ValueError("return_probs is unsupported on the chunked "
+                             "path (probs are never materialised)")
         return _attend_chunked(q, k, v, scale=scale, causal=causal,
                                q_offset=q_offset, kv_len=kv_len, chunk=chunk)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(score_dtype) * scale
@@ -70,7 +77,8 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         e = jnp.exp(s - m)
         denom = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
         p = (e / jnp.maximum(denom, 1e-30).astype(score_dtype)).astype(v.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return (out, p) if return_probs else out
 
 
 def _attend_chunked(q, k, v, *, scale, causal, q_offset, kv_len, chunk):
@@ -239,6 +247,11 @@ def mhsa(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
     aux: Dict[str, Any] = {}
     scale = dh ** -0.5
     rcfg = rank_ctx["cfg"] if rank_ctx else None
+    if rank_ctx is not None and rank_ctx.get("collect_qkv", False):
+        # qkv capture works in every rank mode, including 'off' (the serve
+        # prefill captures per-layer q/k/v to seed the attention-mass pool
+        # without perturbing the full-rank forward)
+        aux["qkv"] = {"q": q, "k": k_full, "v": v_full}
 
     score_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
         cfg.softmax_dtype]
@@ -280,8 +293,6 @@ def mhsa(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
     else:
         ctx = spectral_ctx(q, k_full)
         aux["k_s2"] = ctx["k_s2"]
-        if rank_ctx.get("collect_qkv", False):
-            aux["qkv"] = {"q": q, "k": k_full, "v": v_full}
         if rcfg.mode == "drrl":
             rank_k, drrl_aux = rank_ctx["action_fn"](ctx, rank_ctx)
             aux.update(drrl_aux)
@@ -321,9 +332,28 @@ def mhsa(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
     n_rep = hq // hkv
     k_use_r = repeat_kv(k_use, n_rep)
     v_use = repeat_kv(v_full, n_rep)
-    o = attend(q_use, k_use_r, v_use, scale=scale, causal=True,
-               q_offset=q_offset, kv_len=kv_len, chunked=chunked,
-               score_dtype=score_dtype, score_spec=score_spec)
+    if rank_ctx is not None and rank_ctx.get("collect_mass", False):
+        # per-key attention mass off the same softmax chain the output
+        # uses (no second score pass, honours score_dtype): summed over
+        # valid queries, group-meaned over each kv head's q heads. The
+        # serve prefill seeds its paged mass accumulator with this.
+        o, pr = attend(q_use, k_use_r, v_use, scale=scale, causal=True,
+                       q_offset=q_offset, kv_len=kv_len, chunked=chunked,
+                       score_dtype=score_dtype, score_spec=score_spec,
+                       return_probs=True)
+        prf = pr.astype(jnp.float32)               # (b, hq, sq, skv)
+        mql = rank_ctx.get("mass_q_len")
+        if mql is not None:
+            # padded-bucket prefill: garbage queries beyond the prompt
+            # must not scatter mass back onto real keys
+            q_ok = (jnp.arange(prf.shape[2]) < mql).astype(jnp.float32)
+            prf = prf * q_ok[None, None, :, None]
+        from repro.models.common import kv_group_mean
+        aux["mass"] = kv_group_mean(jnp.sum(prf, axis=2), hkv)
+    else:
+        o = attend(q_use, k_use_r, v_use, scale=scale, causal=True,
+                   q_offset=q_offset, kv_len=kv_len, chunked=chunked,
+                   score_dtype=score_dtype, score_spec=score_spec)
     if "_o_full" in aux:
         of, ol = aux.pop("_o_full"), o
         num = jnp.sum(of.astype(jnp.float32) * ol.astype(jnp.float32), axis=(1, 3))

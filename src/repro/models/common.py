@@ -86,6 +86,16 @@ def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
     return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, d)).reshape(b, s, kv * n_rep, d)
 
 
+def kv_group_mean(w: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    """(..., hq, K) per-q-head key weights -> (..., hkv, K) mean per kv
+    group. The inverse reduction of :func:`repeat_kv`: consecutive q heads
+    share a kv head, so every per-key attention-mass consumer (serve
+    prefill seed, fused decode accumulator, lowrank prefill basis) reduces
+    through here and stays consistent with one GQA head layout."""
+    hq, K = w.shape[-2], w.shape[-1]
+    return w.reshape(*w.shape[:-2], hkv, hq // hkv, K).mean(-2)
+
+
 def make_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int, dtype) -> dict:
     return {
         "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),

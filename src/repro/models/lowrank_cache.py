@@ -43,24 +43,45 @@ def init_lowrank_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-def attention_mass(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+def attention_mass(q: jnp.ndarray, k: jnp.ndarray,
+                   q_len=None) -> jnp.ndarray:
     """Per-key attention mass of the prompt's causal self-attention,
-    averaged over queries and over the q-heads of each kv group.
+    summed over queries and averaged over the q-heads of each kv group.
 
     q: (L, b, s, hq, d); k: (L, b, s, hkv, d). Returns (L, b, hkv, s)
-    normalised so the weights sum to s (scale-free for eigenvectors, but
-    keeps the weighted Gram's trace comparable to the plain one)."""
+    normalised so the weights sum to the number of contributing queries
+    (scale-free for eigenvectors, but keeps the weighted Gram's trace
+    comparable to the plain one, whose weights are 1 per key).
+
+    ``q_len`` (scalar, may be traced) restricts the query average to
+    positions < q_len: the serve prefill runs on a padded length bucket,
+    and the garbage queries beyond the prompt would otherwise scatter
+    score mass back onto real keys.
+
+    Computed one layer at a time (lax.map) so the peak score tensor is
+    (b, hq, s, s), matching the forward's own attention peak, instead of
+    L times that."""
     L, b, s, hq, dh = q.shape
     hkv = k.shape[3]
-    kr = jnp.repeat(k, hq // hkv, axis=3) if hq != hkv else k
-    sc = jnp.einsum("lbqhd,lbkhd->lbhqk", q.astype(jnp.float32),
-                    kr.astype(jnp.float32)) * dh ** -0.5
     causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
-    sc = jnp.where(causal[None, None, None], sc, -1e30)
-    p = jax.nn.softmax(sc, axis=-1)
-    w = jnp.mean(p, axis=3)                        # mean over queries
-    w = w.reshape(L, b, hkv, hq // hkv, s).mean(3)
-    return w * s / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    n_q = jnp.asarray(s if q_len is None else q_len, jnp.float32)
+    q_ok = (None if q_len is None
+            else (jnp.arange(s) < q_len).astype(jnp.float32))
+
+    def one_layer(qk):
+        from repro.models.common import kv_group_mean
+        q_l, k_l = qk                              # (b, s, hq|hkv, d)
+        kr = (jnp.repeat(k_l, hq // hkv, axis=2) if hq != hkv else k_l)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q_l.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * dh ** -0.5
+        sc = jnp.where(causal[None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        if q_ok is not None:
+            p = p * q_ok[None, None, :, None]
+        return kv_group_mean(jnp.sum(p, axis=2), hkv)
+
+    w = jax.lax.map(one_layer, (q, k))             # (L, b, hkv, s)
+    return w * n_q / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
 
 
 def prefill_lowrank(cfg: ModelConfig, params, tokens: jnp.ndarray,

@@ -108,20 +108,30 @@ def _aux_slim(aux: Dict[str, Any], collect: str) -> Dict[str, Any]:
     keep = {"rank", "delta_a_rel", "fidelity", "aux_loss"}
     if collect == "rl":
         keep |= {"action_idx", "logp", "value", "action_mask", "features",
-                 "logits", "delta_a_grid", "delta_a_norm", "k_s2", "qkv"}
+                 "logits", "delta_a_grid", "delta_a_norm", "k_s2", "qkv",
+                 "mass"}
     return {k: v for k, v in aux.items() if k in keep}
 
 
 def make_rank_ctx(cfg: ModelConfig, *, policy_params=None, rng=None, t=0,
                   greedy=True, compute_fidelity=False, h_t=None,
-                  collect_qkv=False):
-    """Build the per-forward rank context (None when mode == 'off')."""
+                  collect_qkv=False, collect_mass=False, mass_q_len=None):
+    """Build the per-forward rank context (None when mode == 'off', unless
+    qkv/mass capture is requested — the serve prefill collects per-layer
+    k/v and the per-key attention mass from the untouched full-rank
+    forward)."""
     rcfg = cfg.rank
     if rcfg.mode == "off":
+        if collect_qkv or collect_mass:
+            return {"cfg": rcfg, "rng": rng, "t": t,
+                    "compute_fidelity": False, "collect_qkv": collect_qkv,
+                    "collect_mass": collect_mass, "mass_q_len": mass_q_len}
         return None
     ctx: Dict[str, Any] = {"cfg": rcfg, "rng": rng, "t": t,
                            "compute_fidelity": compute_fidelity,
-                           "collect_qkv": collect_qkv}
+                           "collect_qkv": collect_qkv,
+                           "collect_mass": collect_mass,
+                           "mass_q_len": mass_q_len}
     if rcfg.mode == "performer":
         from repro.core.baselines import orthogonal_proj
         dh = cfg.resolved_head_dim()
@@ -141,6 +151,7 @@ def forward_dense(cfg: ModelConfig, params, tokens, *, positions=None,
                   policy_params=None, rank_rng=None, rl_t=0, greedy=True,
                   compute_fidelity=False, collect_aux: str = "none",
                   chunked: bool = False, collect_qkv: bool = False,
+                  collect_mass: bool = False, mass_q_len=None,
                   return_hidden: bool = False,
                   extra_embeddings: Optional[jnp.ndarray] = None
                   ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
@@ -162,7 +173,9 @@ def forward_dense(cfg: ModelConfig, params, tokens, *, positions=None,
     rank_ctx0 = make_rank_ctx(cfg, policy_params=policy_params, rng=rank_rng,
                               t=rl_t, greedy=greedy,
                               compute_fidelity=compute_fidelity, h_t=h_t,
-                              collect_qkv=collect_qkv)
+                              collect_qkv=collect_qkv,
+                              collect_mass=collect_mass,
+                              mass_q_len=mass_q_len)
 
     def body(carry, xs):
         x, prev_rank, key = carry
@@ -283,7 +296,8 @@ def decode_step_dense(cfg: ModelConfig, params, cache, tokens, *,
 
 def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                       tokens, *, slot_lens, slot_ranks=None, basis=None,
-                      active=None, use_kernel: bool = False):
+                      active=None, use_kernel: bool = False,
+                      kt_pool=None, mass_pool=None):
     """One fused decode step over every serving slot of a slot-paged cache
     (repro.serve): heterogeneous streams share ONE executable.
 
@@ -299,12 +313,26 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     Per-row dynamic shape is expressed statically: kv_len is a vector
     consumed by the attention mask (or the per-row flash-decode kernel when
     ``use_kernel``), and per-row rank is factor padding + rank masking —
-    q and the K view are projected onto the slot's cached segment basis
-    padded to r_max columns, with columns beyond the slot's rank zeroed, so
-    the widened score contraction only adds exact zeros. No spectral solve
-    happens here: the basis is refreshed by the segment decision (Eq. 12).
+    the projected q factors are padded to r_max columns with columns beyond
+    the slot's rank zeroed, so the widened score contraction only adds
+    exact zeros. No spectral solve happens here: the basis is refreshed by
+    the segment decision (Eq. 12).
 
-    Returns (logits (n_slots, 1, V), (new_pool_k, new_pool_v)).
+    ``kt_pool`` (L, P, page_size, hkv, r_max), when given, is the paged K
+    cache in factor form kt = K . B_r under each slot's segment basis: the
+    score contraction then reads the factor pages (r_max/d of the dense K
+    bytes) instead of gathering + projecting dense K. The new token's
+    factor is appended in-graph; dense K is still written (basis refresh /
+    drift need it) but not read here.
+
+    ``mass_pool`` (L, P, page_size, hkv), when given, accumulates each
+    key's received softmax mass in-graph (group-mean over the q heads of
+    each kv head): the weighted-Gram input of the next segment decision.
+    The new token's cell is reset before the scatter-add, so recycled
+    pages never leak a previous occupant's mass into a live stream.
+
+    Returns (logits (n_slots, 1, V), pools) with pools a dict holding the
+    updated ``k``/``v`` pools plus ``kt``/``mass`` when those were given.
     """
     from repro.models.attention import attend
     from repro.models.common import apply_rope, repeat_kv
@@ -312,6 +340,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
         raise ValueError("paged decode does not support M-RoPE streams")
     if (slot_ranks is None) != (basis is None):
         raise ValueError("slot_ranks and basis must be given together")
+    if (kt_pool is not None or mass_pool is not None) and slot_ranks is None:
+        raise ValueError("kt_pool/mass_pool require the rank path")
     dtype = nn.dt(cfg.dtype)
     x = params["embed"][tokens].astype(dtype)
     ns = tokens.shape[0]
@@ -320,7 +350,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     d = cfg.d_model
     n_rep = hq // hkv
     ps = pool_k.shape[2]
-    M = page_table.shape[1] * ps
+    n_pp = page_table.shape[1]
+    M = n_pp * ps
     rcfg = cfg.rank
     if active is None:
         active = jnp.ones((ns,), bool)
@@ -341,7 +372,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                   ).astype(jnp.float32)             # (ns, r_keep)
 
     def body(x, xs):
-        lp, kp, vp, basis_l = xs
+        lp, kp, vp, basis_l, extra = xs
+        ktp, mp = extra.get("kt"), extra.get("mass")
         p = lp["attn"]
         h = nn.rms_norm(x, lp["ln1"], cfg.rms_eps)
         q = jnp.einsum("bsd,dhf->bshf", h, p["wq"].reshape(d, hq, dh).astype(x.dtype))
@@ -355,34 +387,74 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
         k = apply_rope(k, positions, cfg.rope_theta)
         kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
         vp = vp.at[phys, off].set(v[:, 0].astype(vp.dtype))
-        kg = kp[page_table].reshape(ns, M, hkv, dh)
         vg = vp[page_table].reshape(ns, M, hkv, dh)
-        # stale page contents (freed + re-issued pages) must not leak into
-        # the projected factors: zero everything beyond the valid prefix
-        k_masked = kg * valid[:, :, None, None].astype(kg.dtype)
         if rcfg.mode == "off" or slot_ranks is None:
-            q_use, k_use = q, k_masked
+            kg = kp[page_table].reshape(ns, M, hkv, dh)
+            # stale page contents (freed + re-issued pages) must not leak:
+            # zero everything beyond the valid prefix
+            q_use = q
+            k_use = kg * valid[:, :, None, None].astype(kg.dtype)
         else:
-            # project onto the slot's cached segment eigenbasis; per-row
-            # rank = zeroed columns beyond the slot's bucket
-            b_l = basis_l * col_ok[:, None, None, :]     # (ns, hkv, d, r)
-            b_q = (jnp.repeat(b_l, n_rep, axis=1) if n_rep > 1 else b_l)
-            q_use = jnp.einsum("bshd,bhdr->bshr", q.astype(jnp.float32),
-                               b_q).astype(x.dtype)
-            k_use = jnp.einsum("bmhd,bhdr->bmhr", k_masked.astype(jnp.float32),
-                               b_l).astype(x.dtype)
+            # project q onto the slot's cached segment eigenbasis; per-row
+            # rank = zeroed q columns beyond the slot's bucket (the score
+            # contraction then ignores the matching k-factor columns, so
+            # the k side needs no mask)
+            b_q = (jnp.repeat(basis_l, n_rep, axis=1) if n_rep > 1
+                   else basis_l)                         # (ns, hq, d, r)
+            q_use = (jnp.einsum("bshd,bhdr->bshr", q.astype(jnp.float32),
+                                b_q)
+                     * col_ok[:, None, None, :]).astype(x.dtype)
+            if ktp is not None:
+                # factor-form cache: append the new token's factor and
+                # read the paged factors — r/d of the dense K bytes
+                kt_new = jnp.einsum("bshd,bhdr->bshr",
+                                    k.astype(jnp.float32), basis_l)
+                ktp = ktp.at[phys, off].set(kt_new[:, 0].astype(ktp.dtype))
+                ktg = ktp[page_table].reshape(ns, M, hkv, r_keep)
+                k_use = (ktg * valid[:, :, None, None].astype(ktg.dtype)
+                         ).astype(x.dtype)
+            else:
+                kg = kp[page_table].reshape(ns, M, hkv, dh)
+                k_masked = kg * valid[:, :, None, None].astype(kg.dtype)
+                k_use = jnp.einsum("bmhd,bhdr->bmhr",
+                                   k_masked.astype(jnp.float32),
+                                   basis_l).astype(x.dtype)
+        probs = None
         if use_kernel:
             from repro.kernels.ops import decode_attention
-            o = decode_attention(
-                jnp.swapaxes(q_use, 1, 2)[:, :, 0],      # (ns, hq, d)
-                jnp.swapaxes(k_use, 1, 2),               # (ns, hkv, M, d)
+            res = decode_attention(
+                jnp.swapaxes(q_use, 1, 2)[:, :, 0],      # (ns, hq, r)
+                jnp.swapaxes(k_use, 1, 2),               # (ns, hkv, M, r)
                 jnp.swapaxes(vg, 1, 2),                  # (ns, hkv, M, dh)
-                kv_len, scale=scale)[:, None]            # (ns, 1, hq, dh)
+                kv_len, scale=scale,
+                return_probs=mp is not None)
+            if mp is not None:
+                o, probs = res                           # probs (ns, hq, M)
+                o = o[:, None]
+            else:
+                o = res[:, None]                         # (ns, 1, hq, dh)
         else:
-            o = attend(q_use, repeat_kv(k_use, n_rep), repeat_kv(vg, n_rep),
-                       scale=scale, causal=False,
-                       kv_len=kv_len[:, None, None, None],
-                       score_dtype=score_dtype)
+            res = attend(q_use, repeat_kv(k_use, n_rep), repeat_kv(vg, n_rep),
+                         scale=scale, causal=False,
+                         kv_len=kv_len[:, None, None, None],
+                         score_dtype=score_dtype,
+                         return_probs=mp is not None)
+            if mp is not None:
+                o, pr = res
+                probs = pr[:, :, 0, :]                   # (ns, hq, M)
+            else:
+                o = res
+        if mp is not None:
+            # per-key attention mass: group-mean over each kv head's q
+            # heads, masked to live lanes. Reset the appended token's cell
+            # first — a recycled page must not seed the new key with a
+            # previous occupant's mass.
+            from repro.models.common import kv_group_mean
+            mp = mp.at[phys, off].set(jnp.zeros((ns, hkv), mp.dtype))
+            w_tok = (kv_group_mean(probs.astype(jnp.float32), hkv)
+                     * active[:, None, None])
+            w_sc = jnp.swapaxes(w_tok, 1, 2).reshape(ns, n_pp, ps, hkv)
+            mp = mp.at[page_table].add(w_sc.astype(mp.dtype))
         x = x + jnp.einsum("bshf,hfd->bsd", o,
                            p["wo"].reshape(hq, dh, d).astype(x.dtype))
         if cfg.family == "moe" and cfg.moe is not None and "moe" in lp:
@@ -392,17 +464,28 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
             f = nn.swiglu(nn.rms_norm(x, lp["ln2"], cfg.rms_eps),
                           lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
                           lp["ffn"]["w_down"])
-        return x + f, (kp, vp)
+        new_extra = {}
+        if ktp is not None:
+            new_extra["kt"] = ktp
+        if mp is not None:
+            new_extra["mass"] = mp
+        return x + f, (kp, vp, new_extra)
 
     from repro.models.common import scan_or_unroll
     basis_xs = (basis if basis is not None else
                 jnp.zeros((cfg.num_layers, ns, hkv, dh, 1), jnp.float32))
-    x, (nk, nv) = scan_or_unroll(
-        body, x, (params["layers"], pool_k, pool_v, basis_xs),
+    extra_xs = {}
+    if kt_pool is not None:
+        extra_xs["kt"] = kt_pool
+    if mass_pool is not None:
+        extra_xs["mass"] = mass_pool
+    x, (nk, nv, n_extra) = scan_or_unroll(
+        body, x, (params["layers"], pool_k, pool_v, basis_xs, extra_xs),
         unroll=not cfg.scan_layers)
     x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
     head = params.get("lm_head", None)
     logits = (jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
               if head is not None else
               jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype)))
-    return logits, (nk, nv)
+    pools = {"k": nk, "v": nv, **n_extra}
+    return logits, pools

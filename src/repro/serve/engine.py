@@ -2,15 +2,20 @@
 
 One engine = one slot-paged KV cache + one scheduler + three executables:
 
-  * a length-bucketed **prefill** (full-rank lock-step decode over the
-    padded prompt; one compile per bucket, reused across requests),
+  * a length-bucketed **prefill** (full-rank forward over the padded
+    prompt that also captures per-layer q/k/v; one compile per bucket,
+    reused across requests) — the captured q/k seed the slot's per-key
+    attention-mass accumulator,
   * a slot-indexed **segment decision** (serve.policy) that re-picks a
-    boundary slot's rank bucket from its live layer-0 K spectra and
-    refreshes its cached per-layer eigenbasis — one executable, one
-    dispatch per boundary crossing,
+    boundary slot's rank bucket from its live softmax-weighted layer-0 K
+    spectra, refreshes its cached per-layer eigenbasis, and (in factor
+    form) re-projects its paged K factors — one executable, one dispatch
+    per boundary crossing,
   * ONE fused **decode step** over all slots (models.transformer.
     decode_step_paged): per-row kv_len, per-row rank via factor padding +
-    rank masking — heterogeneous streams never force a recompile.
+    rank masking, in-graph attention-mass accumulation, and (by default)
+    a factor-form score read ``kt = K . B_r`` that touches r_max/d of the
+    dense K bytes — heterogeneous streams never force a recompile.
 
 The step loop is host-side control only; lengths / ranks / tokens stay on
 device between steps (token values are synced per step only when a live
@@ -42,7 +47,8 @@ class ServeEngine:
                  buckets: Optional[Sequence[int]] = None,
                  max_new_cap: int = 256, use_kernel: bool = False,
                  drift_threshold: Optional[float] = None,
-                 time_per_token: bool = False):
+                 time_per_token: bool = False,
+                 factor_cache: Optional[bool] = None):
         self.cfg, self.params, self.policy = cfg, params, policy_params
         self.seg = int(segment_len or cfg.rank.segment_len)
         self.n_slots = n_slots
@@ -50,20 +56,30 @@ class ServeEngine:
         self.use_kernel = use_kernel
         self.drift_threshold = drift_threshold
         self.time_per_token = time_per_token
-        self.cache = PagedKVCache(cfg, n_slots, max_len, page_size)
+        # factor_cache=None -> factor form whenever the rank path is on
+        # AND the widest bucket is below the head dim (otherwise the
+        # factor pool saves nothing). True forces it on (error without a
+        # rank mode — there is no basis to factor against), False forces
+        # the dense-K read; the benchmark uses both for the comparison.
+        self.cache = PagedKVCache(cfg, n_slots, max_len, page_size,
+                                  factored=factor_cache)
         self._buckets = tuple(buckets) if buckets else prefill_buckets(max_len)
         self.sched = Scheduler(n_slots, self._buckets)
         self.fns = get_model(cfg)
         if self.fns.decode_step_paged is None:
             raise ValueError(
                 f"family {cfg.family!r} has no paged decode step")
-        pf_cfg = cfg.with_(rank=cfg.rank.__class__(mode="off"))
-        self._pf_fns = get_model(pf_cfg)
-        self._prefill = jax.jit(
-            lambda p, c, t: self._pf_fns.decode_step(p, c, t))
+        self._pf_cfg = cfg.with_(rank=cfg.rank.__class__(mode="off"))
+        self._prefill = jax.jit(self._prefill_impl)
         self._decide = (make_decide_fn(cfg, policy_params)
                         if cfg.rank.mode != "off" else None)
-        self._step = jax.jit(self._step_impl)
+        # donate the pools + out_buf so XLA updates them in place instead
+        # of materialising a full copy per step (CPU ignores donation and
+        # would warn, so only donate on real accelerators); warmup must
+        # then re-capture the outputs — see warmup()
+        donate = (() if jax.default_backend() == "cpu"
+                  else (1, 2, 3, 4, 11))
+        self._step = jax.jit(self._step_impl, donate_argnums=donate)
         self._drift = (jax.jit(basis_drift)
                        if drift_threshold is not None else None)
         self._reset_state()
@@ -96,7 +112,7 @@ class ServeEngine:
         """Clear all serving state but keep the compiled executables."""
         cfg, c = self.cfg, self.cache
         self.cache = PagedKVCache(cfg, self.n_slots, c.max_len, c.page_size,
-                                  n_pages=c.n_pages)
+                                  n_pages=c.n_pages, factored=c.factored)
         self.sched = Scheduler(self.n_slots, self._buckets)
         self._reset_state()
 
@@ -122,38 +138,68 @@ class ServeEngine:
         need = {bucket_for(len(r.tokens), self._buckets)
                 for r in self.sched.pending}
         for bucket in sorted(need):
-            c = self._pf_fns.init_cache(1, bucket)
-            lg, _ = self._prefill(self.params, c,
-                                  jnp.zeros((1, bucket), jnp.int32))
-            jax.block_until_ready(lg)
+            out = self._prefill(self.params,
+                                jnp.zeros((1, bucket), jnp.int32),
+                                np.int32(bucket))
+            jax.block_until_ready(out[0])
         self._sync_control()
         if self._decide is not None:
-            r, b = self._decide(self.cache.k_pool, self._pt_dev,
-                                self._lens_dev, self.cache.ranks,
-                                self.cache.basis, np.int32(0),
-                                np.bool_(False), np.int32(0))
-            jax.block_until_ready((r, b))
-        out = self._step(self.params, self.cache.k_pool, self.cache.v_pool,
-                         self._pt_dev, self.tokens, self._lens_dev,
-                         self.cache.ranks, self.cache.basis,
-                         jnp.zeros((ns,), bool), self.out_buf,
-                         self._plen_dev)
-        jax.block_until_ready(out)
+            # donated args (basis/spectra/kt) must be re-captured; the
+            # warm decision runs on the empty slot 0 whose state the
+            # admission-time re-decision overwrites before any read
+            (self.cache.ranks, self.cache.basis, self.cache.spectra,
+             self.cache.kt_pool) = self._decide(
+                self.cache.k_pool, self.cache.mass_pool, self.cache.kt_pool,
+                self._pt_dev, self._lens_dev, self.cache.ranks,
+                self.cache.basis, self.cache.spectra,
+                np.int32(0), np.bool_(False), np.int32(0))
+            jax.block_until_ready(self.cache.basis)
+        # all-lanes-inactive step: writes land on the scratch page / row,
+        # so re-capturing the donated pools and out_buf is value-neutral
+        pools, tok, ob, _ = self._step(
+            self.params, self.cache.k_pool, self.cache.v_pool,
+            self.cache.kt_pool, self.cache.mass_pool,
+            self._pt_dev, self.tokens, self._lens_dev,
+            self.cache.ranks, self.cache.basis,
+            jnp.zeros((ns,), bool), self.out_buf,
+            self._plen_dev)
+        self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+        self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
+        self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+        self.out_buf = ob
+        jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         self.stats["compile_s"] += dt
         return dt
 
     # -- data plane ------------------------------------------------------
 
-    def _step_impl(self, params, pool_k, pool_v, page_table, tokens, lens,
-                   ranks, basis, active, out_buf, prompt_lens):
+    def _prefill_impl(self, params, tokens, q_len):
+        """Full-rank prefill over the padded bucket that also captures the
+        per-layer k/v and the prompt's per-key attention mass off the
+        forward's own softmax chain (queries beyond ``q_len`` are padding
+        and excluded from the mass)."""
+        from repro.models import transformer as tr
+        logits, aux = tr.forward_dense(self._pf_cfg, params, tokens,
+                                       collect_aux="rl", collect_qkv=True,
+                                       collect_mass=self.cache.rank_on,
+                                       mass_q_len=q_len)
+        qkv = aux["layers"]["qkv"]
+        mass = aux["layers"]["mass"] if self.cache.rank_on else None
+        return logits, qkv["k"], qkv["v"], mass
+
+    def _step_impl(self, params, pool_k, pool_v, kt_pool, mass_pool,
+                   page_table, tokens, lens, ranks, basis, active, out_buf,
+                   prompt_lens):
         ns = tokens.shape[0]
         off = self.cfg.rank.mode == "off"
-        logits, (pool_k, pool_v) = self.fns.decode_step_paged(
+        logits, pools = self.fns.decode_step_paged(
             params, pool_k, pool_v, page_table, tokens,
             slot_lens=lens, slot_ranks=None if off else ranks,
             basis=None if off else basis, active=active,
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel,
+            kt_pool=None if off else kt_pool,
+            mass_pool=None if off else mass_pool)
         tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
         tok = jnp.where(active[:, None], tok, tokens)     # greedy
         row = jnp.where(active, jnp.arange(ns), ns)       # dead -> scratch row
@@ -161,7 +207,7 @@ class ServeEngine:
                                                 self.max_new_cap - 1), 0)
         out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
         lens = lens + active.astype(lens.dtype)
-        return pool_k, pool_v, tok, out_buf, lens
+        return pools, tok, out_buf, lens
 
     def _sync_control(self) -> None:
         """Push host control state to device after admission/eviction; the
@@ -182,14 +228,15 @@ class ServeEngine:
         for slot, req, bucket in placed:
             t0 = time.perf_counter()
             s = len(req.tokens)
-            cache_pf = self._pf_fns.init_cache(1, bucket)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :s] = req.tokens
-            logits, cache_pf = self._prefill(self.params, cache_pf,
-                                             jnp.asarray(padded))
+            logits, k_l, v_l, mass_l = self._prefill(
+                self.params, jnp.asarray(padded), np.int32(s))
             tok0 = jnp.argmax(logits[0, s - 1]).astype(jnp.int32)
-            self.cache.write_prefill(slot, cache_pf["k"][:, 0, :s],
-                                     cache_pf["v"][:, 0, :s])
+            mass = (None if mass_l is None else
+                    jnp.swapaxes(mass_l[:, 0], 1, 2)[:, :s])  # (L, s, hkv)
+            self.cache.write_prefill(slot, k_l[:, 0, :s], v_l[:, 0, :s],
+                                     mass_layers=mass)
             self.tokens = self.tokens.at[slot, 0].set(tok0)
             self.out_buf = self.out_buf.at[slot, 0].set(tok0)
             st = self.sched.slots[slot]
@@ -226,9 +273,11 @@ class ServeEngine:
         # One dispatch per boundary crossing, one executable for all slots.
         for i in np.nonzero(boundary)[0]:
             st = self.sched.slots[i]
-            self.cache.ranks, self.cache.basis = self._decide(
-                self.cache.k_pool, self._pt_dev, self._lens_dev,
-                self.cache.ranks, self.cache.basis, np.int32(i),
+            (self.cache.ranks, self.cache.basis, self.cache.spectra,
+             self.cache.kt_pool) = self._decide(
+                self.cache.k_pool, self.cache.mass_pool, self.cache.kt_pool,
+                self._pt_dev, self._lens_dev, self.cache.ranks,
+                self.cache.basis, self.cache.spectra, np.int32(i),
                 np.bool_(self.has_rank[i]), np.int32(st.t))
             st.t += 1
             self.stats["decides"] += 1
@@ -267,16 +316,27 @@ class ServeEngine:
             # in a boundary step really do wait on the decide dispatch
             t0 = time.perf_counter() if self.time_per_token else None
             self._maybe_decide()
+            if self.cache.factored:
+                # a factored slot's kt pages are only consistent after its
+                # first decision re-projects them (write_prefill seeds
+                # dense K/mass, not kt); decode_i == 0 is always a segment
+                # boundary so this holds — keep it explicit in case the
+                # decide trigger ever changes
+                assert all(self.has_rank[i] for i in live), \
+                    "factored slot would read unseeded kt pages"
             self._sync_control()
             self.rank_history.append(
                 (self.stats["steps"], self.cache.ranks,
                  np.array([s.active for s in self.sched.slots])))
-            pk, pv, tok, ob, lens = self._step(
+            pools, tok, ob, lens = self._step(
                 self.params, self.cache.k_pool, self.cache.v_pool,
+                self.cache.kt_pool, self.cache.mass_pool,
                 self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
                 self.cache.basis, self._active_dev, self.out_buf,
                 self._plen_dev)
-            self.cache.k_pool, self.cache.v_pool = pk, pv
+            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
+            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
             self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
             dt = None
             if self.time_per_token:

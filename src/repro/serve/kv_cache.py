@@ -27,6 +27,25 @@ Per-slot serving state carried here besides the pool:
                  per-row rank masking), so the eigh cost is paid once per
                  segment — paper Eq. 12's refresh — and the layer-0 slice
                  also feeds the drift trigger.
+  * ``spectra``— per-slot layer-0 K spectra (sigma^2, descending) persisted
+                 from the last segment decision: the "before" side of the
+                 Eq. 9 transition veto, so the veto measures the actual
+                 segment-to-segment transition instead of comparing the
+                 current spectra against themselves.
+  * ``mass_pool`` — per-key accumulated softmax attention mass, paged like
+                 K/V but per (layer, position, kv-head): seeded by the
+                 prefill's causal attention mass and advanced in-graph by
+                 every fused decode step. The segment decision builds its
+                 eigenbasis from the *weighted* Gram K^T diag(w) K, so the
+                 basis concentrates on directions that actually receive
+                 score mass — the same softmax-weighted fix that closed the
+                 prefill-path low-rank quality gap in models/lowrank_cache.
+  * ``kt_pool``— the paged K cache in factor form, kt = K . B_r (top r_max
+                 columns of the slot's segment basis): written for the
+                 whole slot when a decision refreshes the basis, appended
+                 per token by the fused step. The decode score contraction
+                 reads kt (r_max/d of the dense K bytes) instead of K;
+                 dense K stays resident only for basis refresh and drift.
 """
 from __future__ import annotations
 
@@ -43,7 +62,8 @@ class PagedKVCache:
     """Page pool + page tables + per-slot serving state."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 factored: Optional[bool] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.page_size = page_size
@@ -60,10 +80,32 @@ class PagedKVCache:
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self._free: List[int] = list(range(self.n_pages - 1, 0, -1))  # not 0
         self.lens = np.zeros((n_slots,), np.int64)
-        r_max = int(cfg.rank.rank_grid[-1]) if cfg.rank.mode != "off" else dh
+        self.rank_on = cfg.rank.mode != "off"
+        r_max = int(cfg.rank.rank_grid[-1]) if self.rank_on else dh
+        self.r_keep = min(r_max, dh)
+        if factored and not self.rank_on:
+            raise ValueError("factor-form K cache requires a rank mode: "
+                             "kt = K . B_r needs a segment basis to "
+                             "project onto")
+        # default: factor form only when it actually cuts read bytes
+        # (r_max < dh); at r_keep == dh the factor pool costs a full extra
+        # K-sized pool + per-token appends for a 1.0 read ratio. Explicit
+        # factored=True still opts in (the bench's full-rank parity check).
+        self.factored = (self.rank_on and self.r_keep < dh
+                         if factored is None else bool(factored))
         self.ranks = jnp.full((n_slots,), r_max, jnp.int32)
-        self.basis = jnp.zeros((L, n_slots, hkv, dh, min(r_max, dh)),
+        self.basis = jnp.zeros((L, n_slots, hkv, dh, self.r_keep),
                                jnp.float32)
+        # weighted-Gram + veto state only exist on the rank path; the
+        # factor pool additionally needs the engine to opt in (it trades
+        # r_max/d of the K bytes for r_max/d extra cache memory)
+        self.mass_pool = (jnp.zeros((L, self.n_pages, page_size, hkv),
+                                    jnp.float32) if self.rank_on else None)
+        self.spectra = (jnp.zeros((n_slots, hkv, dh), jnp.float32)
+                        if self.rank_on else None)
+        self.kt_pool = (jnp.zeros((L, self.n_pages, page_size, hkv,
+                                   self.r_keep), dtype)
+                        if self.factored else None)
 
     # -- host-side page accounting --------------------------------------
 
@@ -102,9 +144,13 @@ class PagedKVCache:
     # -- device-side prefill write --------------------------------------
 
     def write_prefill(self, slot: int, k_layers: jnp.ndarray,
-                      v_layers: jnp.ndarray) -> None:
+                      v_layers: jnp.ndarray,
+                      mass_layers: Optional[jnp.ndarray] = None) -> None:
         """Scatter a prefilled (L, s, hkv, dh) K/V run into the slot's pages
-        and set its length. Control-plane op (one dispatch per admission)."""
+        and set its length. ``mass_layers`` (L, s, hkv), when given, seeds
+        the slot's attention-mass accumulator with the prompt's per-key
+        causal attention mass. Control-plane op (one dispatch per
+        admission)."""
         s = k_layers.shape[1]
         pos = np.arange(s)
         phys = jnp.asarray(self.page_table[slot][pos // self.page_size])
@@ -113,6 +159,9 @@ class PagedKVCache:
             k_layers.astype(self.k_pool.dtype))
         self.v_pool = self.v_pool.at[:, phys, off].set(
             v_layers.astype(self.v_pool.dtype))
+        if mass_layers is not None and self.mass_pool is not None:
+            self.mass_pool = self.mass_pool.at[:, phys, off].set(
+                mass_layers.astype(self.mass_pool.dtype))
         self.lens[slot] = s
 
     # -- logical views ---------------------------------------------------

@@ -2,12 +2,22 @@
 
 Port of the old ``AdaptiveServer._decide_rank`` (launch/serve.py) from a
 whole-batch host-side decision to a jitted slot-indexed call: the slot id
-is a traced scalar, so ONE executable serves every slot; ``gram_spectrum``
-runs over that slot's live K view for all layers, the guardrail veto and
-annealed threshold apply per slot — and crucially no ``int(cache["len"])``
-host syncs: lengths, previous ranks and bases live on device and the
-chosen rank/basis are written back with dynamic-index updates, feeding
-straight into the fused decode step's rank masks.
+is a traced scalar, so ONE executable serves every slot; the spectral
+solve runs over that slot's live K view for all layers, the guardrail veto
+and annealed threshold apply per slot — and crucially no
+``int(cache["len"])`` host syncs: lengths, previous ranks, bases and
+spectra live on device and the chosen rank / basis / factor pages are
+written back with dynamic-index updates, feeding straight into the fused
+decode step's rank masks.
+
+The eigenbasis comes from the **softmax-weighted Gram** G = K^T diag(w) K,
+with w the slot's accumulated per-key attention mass (seeded at prefill,
+advanced in-graph by every decode step). The plain K Gram spends rank on
+directions Q never looks at — the serve-time incarnation of the quality
+gap the weighted basis already closed on the prefill path
+(models/lowrank_cache.py:attention_mass). A slot whose mass accumulator is
+all zero (direct cache writes in tests) falls back to uniform weights,
+which is exactly the plain Gram.
 
 Decision rules per slot (same semantics the lock-step server had):
   * kv_len < 8            -> r_max (too little signal; no veto)
@@ -16,12 +26,20 @@ Decision rules per slot (same semantics the lock-step server had):
                              snapped to the compiled grid
   * mode == 'drrl'        -> policy logits per (slot, head) with the Eq. 11
                              safety mask, head-mean argmax per slot
-  * mode == 'random'      -> uniform grid draw keyed by the slot's clock
+  * mode == 'random'      -> uniform grid draw keyed by (slot, clock)
   * transition veto       -> Eq. 9 relative bound at the chosen bucket vs
-                             the slot's annealed eps_t; veto keeps prev
+                             the slot's annealed eps_t, with the "before"
+                             side taken from the slot's persisted
+                             previous-segment spectra — the veto measures
+                             the actual transition
+
+When the cache runs in factor form, a decision also rewrites the slot's
+``kt_pool`` pages as K . B_r under the refreshed basis, so the fused step
+keeps reading consistent factors across the basis switch.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -33,20 +51,27 @@ from repro.core import perturbation as pert
 
 
 def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
-    """Returns jitted ``decide(k_pool, page_table, lens, ranks, basis,
-    slot, has_rank, t) -> (ranks', basis')``.
+    """Returns jitted ``decide(k_pool, mass_pool, kt_pool, page_table,
+    lens, ranks, basis, spectra, slot, has_rank, t) -> (ranks', basis',
+    spectra', kt_pool')``.
 
     One call re-decides ONE slot (``slot`` is a traced scalar index — a
-    single executable serves every slot): it gathers that slot's pages,
-    takes the spectral solve for all layers, picks the rank bucket from the
-    layer-0 spectra (same rules the old lock-step server used), applies the
-    Eq. 9/11 transition veto, and writes the slot's new rank and per-layer
-    K eigenbasis back into the device-resident vectors with dynamic-index
-    updates. The fused decode step only *projects* onto the cached basis,
-    so the eigh cost is paid once per segment, not once per token (paper
-    Eq. 12's segment-level refresh) — and per-slot calls keep the spectral
-    work proportional to the number of boundary crossings, exactly what a
-    per-stream server would pay, instead of n_slots times the union.
+    single executable serves every slot): it gathers that slot's K and
+    attention-mass pages, takes the weighted spectral solve for all
+    layers, picks the rank bucket from the layer-0 spectra (same rules the
+    old lock-step server used), applies the Eq. 9/11 transition veto
+    against the slot's previous-segment spectra, and writes the slot's new
+    rank, per-layer K eigenbasis, layer-0 spectra and (in factor form) its
+    re-projected kt pages back into the device-resident state with
+    dynamic-index updates. The fused decode step only *projects* onto the
+    cached basis / reads the cached factors, so the eigh cost is paid once
+    per segment, not once per token (paper Eq. 12's segment-level refresh)
+    — and per-slot calls keep the spectral work proportional to the number
+    of boundary crossings, exactly what a per-stream server would pay,
+    instead of n_slots times the union.
+
+    ``kt_pool`` may be None (dense-K serving): the returned kt_pool is
+    then None as well.
     """
     rcfg = cfg.rank
     if rcfg.mode == "off":
@@ -55,22 +80,50 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
     g_lo, g_hi = int(rcfg.rank_grid[0]), int(rcfg.rank_grid[-1])
     dh = cfg.resolved_head_dim()
     r_keep = min(g_hi, dh)
+    # donate the state this call rewrites (kt_pool especially — a full
+    # K-sized pool copied per boundary crossing otherwise). ranks are NOT
+    # donated: the engine's rank_history keeps references to past rank
+    # arrays that a later decide would invalidate. CPU ignores donation
+    # and warns, so donate on real accelerators only.
+    donate = () if jax.default_backend() == "cpu" else (2, 6, 7)
 
-    @jax.jit
-    def decide(k_pool, page_table, lens, ranks, basis, slot, has_rank, t):
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def decide(k_pool, mass_pool, kt_pool, page_table, lens, ranks, basis,
+               spectra, slot, has_rank, t):
         pt_row = jax.lax.dynamic_slice_in_dim(page_table, slot, 1, 0)[0]
         kv_len = jax.lax.dynamic_slice_in_dim(lens, slot, 1, 0)[0]
         prev_rank = jax.lax.dynamic_slice_in_dim(ranks, slot, 1, 0)[0]
+        # a recycled slot's first decision must not see the previous
+        # occupant's rank (the drrl feature path reads it even though the
+        # veto is disabled): fall back to the fresh-slot default r_max
+        prev_rank = jnp.where(has_rank, prev_rank, jnp.int32(g_hi))
         gathered = k_pool[:, pt_row]           # (L, pages, ps, h, d)
         L = gathered.shape[0]
         kv = gathered.reshape(L, -1, *gathered.shape[3:])
         M = kv.shape[1]
-        valid = jnp.arange(M) < kv_len
-        kk = jnp.swapaxes(kv, 1, 2) * valid[None, None, :, None]  # (L,h,M,d)
-        s2_l, evecs_l = lr.gram_spectrum(lr.gram(kk))     # (L, h, d[, d])
+        valid = (jnp.arange(M) < kv_len).astype(jnp.float32)
+        kk = jnp.swapaxes(kv, 1, 2).astype(jnp.float32) \
+            * valid[None, None, :, None]                  # (L, h, M, d)
+        # softmax-weighted Gram: w is the accumulated per-key attention
+        # mass, normalised to sum kv_len so the spectra stay on the plain
+        # Gram's scale (weights 1 per key); zero mass (state written
+        # outside the engine) degrades to uniform weights == plain Gram
+        w = jnp.swapaxes(mass_pool[:, pt_row].reshape(L, M, -1), 1, 2)
+        w = jnp.maximum(w, 0.0) * valid[None, None, :]    # (L, h, M)
+        tot = jnp.sum(w, axis=-1, keepdims=True)
+        n_valid = jnp.maximum(kv_len.astype(jnp.float32), 1.0)
+        w = jnp.where(tot > 0.0, w * n_valid / jnp.maximum(tot, 1e-30),
+                      valid[None, None, :])
+        gk = jnp.einsum("lhmd,lhm,lhme->lhde", kk, w, kk)
+        s2_l, evecs_l = lr.gram_spectrum(gk)              # (L, h, d[, d])
         s2 = s2_l[0]                 # layer-0 spectra drive the decision
         h = s2.shape[0]
         eps_t = pert.annealed_threshold(rcfg.epsilon0, rcfg.anneal_lambda, t)
+        # "before" side of the transition: the spectra persisted at the
+        # slot's previous decision (first decision: no transition yet —
+        # compare against itself, and the veto is disabled via has_rank)
+        prev_s2 = jax.lax.dynamic_slice_in_dim(spectra, slot, 1, 0)[0]
+        prev_s2 = jnp.where(has_rank, prev_s2, s2)
 
         if rcfg.mode == "fixed":
             chosen = jnp.int32(rcfg.fixed_rank)
@@ -84,7 +137,7 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
             h_t = jnp.zeros((1, 8), jnp.float32)
             w_t = jnp.zeros((9,), jnp.float32)
             prev = jnp.full((1, h), prev_rank, jnp.int32)
-            ctx = {"k_s2": s2[None], "q_s2": s2[None]}
+            ctx = {"k_s2": s2[None], "q_s2": prev_s2[None]}
             feats, (_, _, bounds_rel, _) = build_features(
                 rcfg, ctx, h_t, w_t, 0, prev)
             logits, _ = policy_apply(policy_params, feats)     # (h, G)
@@ -93,13 +146,20 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
             logits = jnp.where(ok, logits, -1e30)
             chosen = grid[jnp.argmax(jnp.mean(logits, axis=0))]
         else:                                     # 'random' (or drrl w/o pol)
-            key = jax.random.fold_in(jax.random.PRNGKey(17),
-                                     t.astype(jnp.int32))
+            # fold BOTH the slot id and its segment clock into the key:
+            # folding only t made every slot at the same clock draw the
+            # same bucket, and made draws repeat across runs
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(17),
+                                   t.astype(jnp.int32)),
+                slot.astype(jnp.int32))
             chosen = grid[jax.random.randint(key, (), 0, grid.shape[0])]
 
         # transition veto (Eq. 9): head-mean relative bound at the chosen
-        # bucket must clear the slot's annealed threshold
-        bounds, norm = pert.guardrail_report(s2, s2, rcfg.rank_grid, dh)
+        # bucket must clear the slot's annealed threshold. The bound's dQ
+        # side uses the previous-segment spectra, so it estimates the
+        # actual segment-to-segment score perturbation.
+        bounds, norm = pert.guardrail_report(prev_s2, s2, rcfg.rank_grid, dh)
         rel = jnp.mean(bounds / jnp.maximum(norm[..., None], 1e-30), axis=0)
         rel_c = rel[jnp.argmin(jnp.abs(grid - chosen))]
         switching = has_rank & (chosen != prev_rank)
@@ -111,7 +171,20 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
         basis = jax.lax.dynamic_update_slice(
             basis, evecs_l[:, None, :, :, :r_keep],
             (0, slot, 0, 0, 0))
-        return ranks, basis
+        spectra = jax.lax.dynamic_update_slice(
+            spectra, s2[None], (slot, 0, 0))
+        if kt_pool is not None:
+            # factor-form refresh: re-project the slot's whole K run onto
+            # the new basis so the fused step's factor reads stay
+            # consistent across the basis switch (positions beyond kv_len
+            # are already zeroed in kk; scratch-page entries in the page
+            # table absorb the leftover writes harmlessly)
+            kt = jnp.einsum("lhmd,lhdr->lmhr", kk, evecs_l[..., :r_keep])
+            pages = pt_row.shape[0]
+            ps = kt_pool.shape[2]
+            kt = kt.reshape(L, pages, ps, kt.shape[2], r_keep)
+            kt_pool = kt_pool.at[:, pt_row].set(kt.astype(kt_pool.dtype))
+        return ranks, basis, spectra, kt_pool
 
     return decide
 

@@ -53,12 +53,17 @@ class SlotState:
 
 
 def prefill_buckets(max_prompt: int, floor: int = 8) -> Tuple[int, ...]:
-    """Power-of-two length buckets covering [1, max_prompt]."""
+    """Power-of-two length buckets covering [1, max_prompt].
+
+    The top bucket is clamped to ``max_prompt``: for non-power-of-two
+    maxima (e.g. 100) the unclamped doubling would emit a bucket (128)
+    larger than any slot can hold, compiling a prefill executable and
+    cache no request is ever allowed to fill."""
     out, b = [], floor
     while b < max_prompt:
         out.append(b)
         b *= 2
-    out.append(b)
+    out.append(min(b, max_prompt))
     return tuple(out)
 
 

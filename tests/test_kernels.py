@@ -96,6 +96,33 @@ def test_decode_per_row_kv_len(dtype):
                                    atol=tol, rtol=tol)
 
 
+def test_decode_return_probs():
+    """The probability-row output (serving's attention-mass feed) must be
+    the normalised softmax row: rescaled correctly across kv blocks,
+    exactly zero beyond each row's kv_len, and consistent with the
+    no-probs output."""
+    b, hq, hkv, M, r, dv = 3, 4, 2, 96, 16, 8
+    ks = jax.random.split(K0, 3)
+    q = _rand((b, hq, r), ks[0], jnp.float32)
+    k = _rand((b, hkv, M, r), ks[1], jnp.float32)
+    v = _rand((b, hkv, M, dv), ks[2], jnp.float32)
+    lens = jnp.asarray([5, 96, 41], jnp.int32)
+    out, probs = decode_attention(q, k, v, lens, scale=r ** -0.5,
+                                  block_k=32, interpret=True,
+                                  return_probs=True)
+    out0 = decode_attention(q, k, v, lens, scale=r ** -0.5, block_k=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out0), atol=1e-6)
+    kr = jnp.repeat(k, hq // hkv, axis=1)
+    sc = jnp.einsum("bhr,bhmr->bhm", q, kr) * r ** -0.5
+    sc = jnp.where(jnp.arange(M)[None, None, :] < lens[:, None, None],
+                   sc, -1e30)
+    ref = jax.nn.softmax(sc, axis=-1)
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(ref), atol=1e-5)
+    for i, n in enumerate([5, 41]):
+        assert float(np.abs(np.asarray(probs)[(0, 2)[i], :, n:]).max()) == 0.0
+
+
 def test_flash_q_offset_matches_decode_semantics():
     """flash with q_offset == suffix rows of the full causal result."""
     b, h, s, d = 1, 2, 32, 16

@@ -206,10 +206,12 @@ def test_decide_matches_numpy_oracle():
     k = rnd.normal(size=(L, s, hkv, dh)).astype(np.float32)
     cache.allocate(0, s)
     cache.write_prefill(0, jnp.asarray(k), jnp.asarray(np.zeros_like(k)))
-    ranks, basis = decide(cache.k_pool, jnp.asarray(cache.page_table),
-                          jnp.asarray(cache.lens, jnp.int32), cache.ranks,
-                          cache.basis, np.int32(0), np.bool_(False),
-                          np.int32(0))
+    ranks, basis, spectra, _ = decide(
+        cache.k_pool, cache.mass_pool, cache.kt_pool,
+        jnp.asarray(cache.page_table),
+        jnp.asarray(cache.lens, jnp.int32), cache.ranks,
+        cache.basis, cache.spectra, np.int32(0), np.bool_(False),
+        np.int32(0))
     grid = np.asarray(cfg.rank.rank_grid)
     g = np.einsum("shd,she->hde", k[0], k[0])   # (hkv, dh, dh) layer-0 Gram
     evals = np.linalg.eigvalsh(g)[..., ::-1]
@@ -228,6 +230,12 @@ def test_decide_matches_numpy_oracle():
     # slot 1 untouched by the dynamic-index update
     assert int(ranks[1]) == int(cache.ranks[1])
     assert float(jnp.abs(basis[:, 1]).max()) == 0.0
+    # the decision persisted its layer-0 spectra (veto "before" side);
+    # zero mass falls back to the plain Gram, so they match the oracle
+    np.testing.assert_allclose(np.asarray(spectra[0]),
+                               np.maximum(evals, 0.0), rtol=1e-4,
+                               atol=1e-3 * float(evals.max()))
+    assert float(jnp.abs(spectra[1]).max()) == 0.0
 
 
 def test_fullrank_basis_projection_matches_off():
