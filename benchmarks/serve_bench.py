@@ -6,9 +6,9 @@ decoded twice:
   * **engine**: one ServeEngine with n_slots concurrent lanes (the
     continuous-batching path: slot-paged cache, per-slot dynamic ranks,
     one fused executable);
-  * **sequential**: the same requests served one at a time through
-    ``AdaptiveServer.generate`` (per-request lock-step decode), the way a
-    single-stream server would drain the queue.
+  * **sequential**: the same requests served one at a time through a
+    1-slot ``repro.serve.api.Engine`` (per-request lock-step decode), the
+    way a single-stream server would drain the queue.
 
 Both sides are warmed first; compilation is reported separately and
 excluded from throughput. Emits aggregate tok/s and p50/p95 per-token
@@ -20,6 +20,13 @@ the score-contraction read bytes per decoded token are recorded for a
 low-rank serving grid (r_max/d of the dense K bytes; the wall-clock gap
 only opens on accelerators where decode is KV-bandwidth bound — CPU toy
 scale is dispatch-bound).
+
+A fourth section compares **interleaved (chunked) vs blocking (one-shot)
+prefill admission** on the same staggered workload: token parity between
+the two admission modes is asserted, and per-request TTFT p50/p95 plus
+the decode-stall seconds (wall time spent in monolithic prefills while
+other streams had decode work pending — identically zero for chunked
+admission) land in BENCH_serve.json.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -99,16 +106,59 @@ def factor_compare(cfg, params, workload, n_slots: int, max_len: int):
     }
 
 
+def chunked_compare(cfg, params, workload, n_slots: int, max_len: int,
+                    chunk: int = 8):
+    """Interleaved (chunked) vs blocking (one-shot) prefill admission.
+
+    Both engines run the identical staggered workload with per-step
+    blocking (honest walls). Token parity between the admission modes is
+    asserted; per-request TTFT (admission -> token 0) p50/p95 and the
+    blocking path's decode-stall seconds are reported.
+    """
+    from repro.serve import Request, ServeEngine
+
+    def drive(prefill_chunk):
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          page_size=16, segment_len=8,
+                          max_new_cap=max(w["max_new"] for w in workload),
+                          prefill_chunk=prefill_chunk, time_per_token=True)
+        for w in workload:
+            eng.submit(Request(**w))
+        eng.warmup()
+        outs = eng.run()
+        ttft = np.asarray(eng.first_token_s) * 1e3          # ms
+        return outs, {
+            "ttft_p50_ms": float(np.percentile(ttft, 50)),
+            "ttft_p95_ms": float(np.percentile(ttft, 95)),
+            "decode_stall_s": eng.stats["stall_s"],
+            "mixed_steps": eng.stats["mixed_steps"],
+            "steps": eng.stats["steps"],
+            "tok_per_s": eng.stats["tokens_decoded"]
+                         / max(eng.stats["decode_s"], 1e-9),
+        }
+
+    outs_b, blocking = drive(None)
+    outs_i, interleaved = drive(chunk)
+    parity = all(np.array_equal(outs_b[w["rid"]], outs_i[w["rid"]])
+                 for w in workload)
+    assert parity, "chunked-prefill decode diverged from one-shot prefill"
+    return {
+        "parity": parity,
+        "chunk": chunk,
+        "interleaved": interleaved,
+        "blocking": blocking,
+    }
+
+
 def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         out_path: str = "BENCH_serve.json"):
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.configs.base import RankConfig
-    from repro.launch.serve import AdaptiveServer
     from repro.models.api import get_model
     from repro.serve import Request, ServeEngine
+    from repro.serve.api import Engine, EngineConfig, SamplingParams
 
     n_requests, max_new = (4, 8) if smoke else (8, 16) if quick else (16, 24)
     if smoke:
@@ -161,31 +211,41 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "tokens_decoded": es["tokens_decoded"], "n_slots": n_slots,
     }
 
-    # -- sequential per-request lock-step -------------------------------
-    server = AdaptiveServer(cfg, params, max_len=max_len, page_size=16)
+    # -- sequential per-request lock-step (1-slot api.Engine) -----------
+    def seq_engine(timed: bool) -> Engine:
+        return Engine(cfg, params, config=EngineConfig(
+            n_slots=1, max_len=max_len, page_size=16, segment_len=8,
+            max_new_cap=max_new, prefill_chunk=None, sampling=False,
+            time_per_token=timed))
+
+    seq_server = seq_engine(False)
     best = None
     for _ in range(repeats):
         seq_decode_s = seq_prefill_s = seq_compile_s = 0.0
         seq_tokens = 0
         for w in workload:
-            res = server.generate(jnp.asarray(w["tokens"][None]),
-                                  w["max_new"], segment_len=8)
-            seq_decode_s += res["stats"]["decode_s"]
-            seq_prefill_s += res["stats"]["prefill_s"]
-            seq_compile_s += res["compile_s"]
-            seq_tokens += res["stats"]["tokens_decoded"]
+            seq_server.reset()
+            seq_server.submit(w["tokens"],
+                              SamplingParams(max_new=w["max_new"]))
+            seq_compile_s += seq_server.warmup()
+            seq_server.run()
+            s = seq_server.stats
+            seq_decode_s += s["decode_s"]
+            seq_prefill_s += s["prefill_s"]
+            seq_tokens += s["tokens_decoded"]
         if best is None or seq_decode_s < best[0]:
             best = (seq_decode_s, seq_prefill_s, seq_compile_s, seq_tokens)
     seq_decode_s, seq_prefill_s, seq_compile_s, seq_tokens = best
     # sequential latency pass: same per-step blocking the engine's latency
     # run uses, so both p50/p95 are true per-token walls
-    server_lat = AdaptiveServer(cfg, params, max_len=max_len, page_size=16,
-                                time_per_token=True)
     seq_lat = []
+    server_lat = seq_engine(True)
     for w in workload:
-        res = server_lat.generate(jnp.asarray(w["tokens"][None]),
-                                  w["max_new"], segment_len=8)
-        seq_lat.extend(t * 1e3 for t in res["token_lat_s"])
+        server_lat.reset()
+        server_lat.submit(w["tokens"], SamplingParams(max_new=w["max_new"]))
+        server_lat.warmup()
+        server_lat.run()
+        seq_lat.extend(t * 1e3 for t in server_lat.core.token_latencies)
     seq_lat = np.asarray(seq_lat)
     seq_res = {
         "tok_per_s": seq_tokens / max(seq_decode_s, 1e-9),
@@ -200,6 +260,10 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
     factor_res = factor_compare(cfg, params, fc_workload,
                                 n_slots=min(n_slots, 4), max_len=max_len)
 
+    # -- chunked (interleaved) vs one-shot (blocking) admission ---------
+    chunk_res = chunked_compare(cfg, params, workload,
+                                n_slots=min(n_slots, 4), max_len=max_len)
+
     out = {
         "workload": {"n_requests": n_requests, "max_new": max_new,
                      "prompt_lens": [len(w["tokens"]) for w in workload],
@@ -208,6 +272,7 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "sequential": seq_res,
         "speedup": engine_res["tok_per_s"] / max(seq_res["tok_per_s"], 1e-9),
         "factor_cache": factor_res,
+        "chunked_prefill": chunk_res,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     with open(out_path, "w") as f:
@@ -238,6 +303,13 @@ def main():
           f"K-read/token {lo['factored']['k_read_bytes_per_token']}B vs "
           f"{lo['dense']['k_read_bytes_per_token']}B dense "
           f"(ratio {lo['read_ratio']:.2f} = r{lo['r_keep']}/d{lo['dh']})")
+    cp = res["chunked_prefill"]
+    ci, cb = cp["interleaved"], cp["blocking"]
+    print(f"chunked    : parity {cp['parity']}  TTFT p50/p95 "
+          f"{ci['ttft_p50_ms']:.1f}/{ci['ttft_p95_ms']:.1f} ms interleaved "
+          f"vs {cb['ttft_p50_ms']:.1f}/{cb['ttft_p95_ms']:.1f} ms blocking; "
+          f"decode stall {ci['decode_stall_s']:.2f}s vs "
+          f"{cb['decode_stall_s']:.2f}s")
     if res["speedup"] <= 1.0 and not args.smoke:
         # --smoke is a does-it-run canary: 4 under-saturated requests,
         # single repeat — not a throughput measurement

@@ -1,4 +1,4 @@
-"""Pallas TPU flash-decode: one new query token against a (possibly
+"""Pallas TPU flash-decode: new query tokens against a (possibly
 rank-truncated) KV cache with a dynamic valid-prefix length.
 
 Grid: (batch*q_heads, kv_blocks) with running-softmax scratch accumulation —
@@ -15,13 +15,24 @@ Per-row *rank* needs no kernel support: the engine pads the q factors to
 the widest bucket and zeroes the columns beyond each row's rank, which
 leaves the score contraction exact (adding 0.0 terms).
 
-``return_probs=True`` additionally emits the normalised attention row
-p (b, hq, M) of the new token: the serving engine accumulates per-key
-attention mass in-graph (the weighted-Gram basis input), and emitting p
-from the kernel's own running softmax avoids a second score pass over the
-cache. The row is accumulated unnormalised in a VMEM scratch strip,
-rescaled by the same exp(m_prev - m_new) correction as the output
-accumulator, and divided by the final denominator once.
+**Chunked prefill** (repro.serve.api): q may carry a block of C query
+tokens per row — ``q: (b, hq, C, r)`` — with a per-row ``q_start`` giving
+the cache position of the row's first query. Query j of row b then sees
+keys ``k_pos <= q_start[b] + j`` (causal within the chunk, everything
+before it unmasked), so one executable serves decode rows (C=1,
+q_start = kv_len-1) and mid-prefill rows (C = chunk size) side by side.
+Rows whose chunk is shorter than C pad with garbage queries whose outputs
+the engine discards; the ``kv_len`` mask caps what they can see, and a
+fully-masked query row contributes exact zeros (not exp(0) garbage) to
+its own accumulator.
+
+``return_probs=True`` additionally emits the normalised attention rows
+p (b, hq, C, M): the serving engine accumulates per-key attention mass
+in-graph (the weighted-Gram basis input), and emitting p from the
+kernel's own running softmax avoids a second score pass over the cache.
+The rows are accumulated unnormalised in a VMEM scratch strip, rescaled
+by the same exp(m_prev - m_new) correction as the output accumulator,
+and divided by the final denominator once.
 """
 from __future__ import annotations
 
@@ -35,7 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+def _decode_kernel(len_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref, *rest,
                    scale: float, block_k: int, hq: int, return_probs: bool):
     if return_probs:
         p_ref, m_scr, l_scr, acc_scr, p_scr = rest
@@ -44,7 +55,9 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
         m_scr, l_scr, acc_scr = rest
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
-    kv_len = len_ref[pl.program_id(0) // hq]
+    row = pl.program_id(0) // hq
+    kv_len = len_ref[row]
+    q_start = qstart_ref[row]
 
     @pl.when(ki == 0)
     def _init():
@@ -58,15 +71,19 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
 
     @pl.when(k_start < kv_len)
     def _compute():
-        q = q_ref[0].astype(jnp.float32)                  # (1, r) -> use (8, r) tile
+        q = q_ref[0].astype(jnp.float32)                  # (C, r)
         k = k_ref[0].astype(jnp.float32)                  # (bk, r)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(k_pos < kv_len, s, NEG_INF)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        s = jnp.where((k_pos <= q_pos) & (k_pos < kv_len), s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        p = jnp.exp(s - m_new[:, None])
+        # a chunk query whose causal window hasn't reached this block yet
+        # is fully masked here: m_new stays NEG_INF and the naive
+        # exp(s - m_new) would be exp(0) = 1 per key — force exact zeros
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
         v = v_ref[0].astype(jnp.float32)
@@ -75,7 +92,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
                                               preferred_element_type=jnp.float32))
         if return_probs:
             p_scr[...] = p_scr[...] * corr[:, None]
-            p_scr[0, pl.ds(k_start, block_k)] = p[0]
+            p_scr[:, pl.ds(k_start, block_k)] = p
         m_scr[...] = m_new
 
     @pl.when(ki == n_k - 1)
@@ -90,11 +107,20 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
                    static_argnames=("scale", "block_k", "interpret",
                                     "return_probs"))
 def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
-                 interpret: bool = False, return_probs: bool = False):
-    """q: (b, hq, r); k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: () or (b,).
-    Returns (b, hq, dv), or ((b, hq, dv), (b, hq, M) probs) with
+                 interpret: bool = False, return_probs: bool = False,
+                 q_start=None):
+    """q: (b, hq, r) single decode token, or (b, hq, C, r) per-row query
+    chunk; k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: () or (b,) valid
+    keys INCLUDING the new chunk. ``q_start``: () or (b,) cache position of
+    each row's first query (default ``kv_len - C``: the chunk sits at the
+    end of the valid prefix — for C=1 that is the classic decode mask
+    ``k_pos < kv_len``). Returns (b, hq, dv) / (b, hq, C, dv), with the
+    normalised probability rows (b, hq, [C,] M) appended when
     ``return_probs``."""
-    b, hq, r = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, :, None, :]
+    b, hq, C, r = q.shape
     hkv, M, dv = k.shape[1], k.shape[2], v.shape[3]
     n_rep = hq // hkv
     block_k = min(block_k, max(M, 8))
@@ -104,31 +130,34 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     M_p = M + pad_k
 
-    qf = q.reshape(b * hq, 1, r)
+    qf = q.reshape(b * hq, C, r)
     kf = k.reshape(b * hkv, M_p, r)
     vf = v.reshape(b * hkv, M_p, dv)
     lens = jnp.broadcast_to(jnp.reshape(kv_len, (-1,)), (b,)).astype(jnp.int32)
+    qs = (lens - C if q_start is None else
+          jnp.broadcast_to(jnp.reshape(q_start, (-1,)), (b,)).astype(jnp.int32))
 
     grid = (b * hq, M_p // block_k)
     kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
                                hq=hq, return_probs=return_probs)
-    out_shape = [jax.ShapeDtypeStruct((b * hq, 1, dv), v.dtype)]
-    out_specs = [pl.BlockSpec((1, 1, dv), lambda bh, ki: (bh, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((b * hq, C, dv), v.dtype)]
+    out_specs = [pl.BlockSpec((1, C, dv), lambda bh, ki: (bh, 0, 0))]
     scratch = [
-        pltpu.VMEM((1,), jnp.float32),
-        pltpu.VMEM((1,), jnp.float32),
-        pltpu.VMEM((1, dv), jnp.float32),
+        pltpu.VMEM((C,), jnp.float32),
+        pltpu.VMEM((C,), jnp.float32),
+        pltpu.VMEM((C, dv), jnp.float32),
     ]
     if return_probs:
-        out_shape.append(jax.ShapeDtypeStruct((b * hq, 1, M_p), jnp.float32))
-        out_specs.append(pl.BlockSpec((1, 1, M_p), lambda bh, ki: (bh, 0, 0)))
-        scratch.append(pltpu.VMEM((1, M_p), jnp.float32))
+        out_shape.append(jax.ShapeDtypeStruct((b * hq, C, M_p), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, C, M_p), lambda bh, ki: (bh, 0, 0)))
+        scratch.append(pltpu.VMEM((C, M_p), jnp.float32))
     res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, r), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, C, r), lambda bh, ki: (bh, 0, 0)),
             pl.BlockSpec((1, block_k, r),
                          lambda bh, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
             pl.BlockSpec((1, block_k, dv),
@@ -138,9 +167,11 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
         out_shape=out_shape if return_probs else out_shape[0],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(lens, qf, kf, vf)
+    )(lens, qs, qf, kf, vf)
     if return_probs:
         o, p = res
-        return (o.reshape(b, hq, dv),
-                p.reshape(b, hq, M_p)[:, :, :M])
-    return res.reshape(b, hq, dv)
+        o = o.reshape(b, hq, C, dv)
+        p = p.reshape(b, hq, C, M_p)[..., :M]
+        return (o[:, :, 0], p[:, :, 0]) if squeeze else (o, p)
+    o = res.reshape(b, hq, C, dv)
+    return o[:, :, 0] if squeeze else o

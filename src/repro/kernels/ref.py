@@ -37,3 +37,23 @@ def decode_ref(q, k, v, kv_len, *, scale: float):
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bhkd->bhd", p.astype(vr.dtype), vr)
+
+
+def decode_chunk_ref(q, k, v, kv_len, q_start, *, scale: float):
+    """Chunked-prefill decode oracle. q: (b, hq, C, dq); k: (b, hkv, M, dq);
+    v: (b, hkv, M, dv); kv_len/q_start: () or (b,). Query j of row b sees
+    keys k_pos <= q_start[b] + j (and k_pos < kv_len[b]).
+    Returns ((b, hq, C, dv), probs (b, hq, C, M))."""
+    b, hq, C, dq = q.shape
+    hkv, M = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    kr = jnp.repeat(k, n_rep, axis=1)
+    vr = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhcd,bhkd->bhck", q, kr).astype(jnp.float32) * scale
+    k_pos = jnp.arange(M)[None, None, None, :]
+    q_pos = (jnp.reshape(q_start, (-1, 1, 1, 1))
+             + jnp.arange(C)[None, None, :, None])
+    ok = (k_pos <= q_pos) & (k_pos < jnp.reshape(kv_len, (-1, 1, 1, 1)))
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhck,bhkd->bhcd", p.astype(vr.dtype), vr), p

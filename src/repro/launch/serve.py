@@ -1,95 +1,23 @@
-"""Adaptive serving front-end.
+"""Adaptive serving front-end (thin shim over ``repro.serve.api``).
 
-The decode stack lives in ``repro.serve`` (continuous-batching engine with
-a slot-paged KV cache and per-slot dynamic ranks); ``AdaptiveServer`` is a
-thin compatibility wrapper that keeps the historical lock-step API: a
-(b, s0) prompt batch becomes b concurrent engine streams admitted at step
-0, decoded greedily for ``n_tokens`` each.
-
-Throughput accounting: ``generate`` warms the engine's executables first
-and reports their first-use compilation separately (``compile_s``), so
-``tok_per_s`` measures warm decode steps only (prefill time is also
-excluded, as before).
+The serving surface lives in ``repro.serve.api``: ``EngineConfig`` +
+``SamplingParams`` + ``Engine.submit(prompt, params) -> RequestHandle``
+with chunked prefill interleaved into the fused decode step. The
+historical :class:`AdaptiveServer` lock-step wrapper is re-exported from
+there (deprecated) so old imports keep working.
 """
 from __future__ import annotations
 
 import argparse
-from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig
 from repro.models.api import get_model
-from repro.serve import Request, ServeEngine
+from repro.serve.api import (AdaptiveServer, Engine, EngineConfig,
+                             SamplingParams)
 
-
-class AdaptiveServer:
-    """Batched decode server with per-segment, per-stream rank re-decision.
-
-    Compatibility wrapper over :class:`repro.serve.ServeEngine`; compiled
-    executables are cached across ``generate`` calls with matching shapes.
-    """
-
-    def __init__(self, cfg: ModelConfig, params, policy_params=None,
-                 max_len: int = 2048, page_size: int = 16,
-                 use_kernel: bool = False, time_per_token: bool = False,
-                 factor_cache: Optional[bool] = None):
-        self.cfg = cfg
-        self.params = params
-        self.policy = policy_params
-        self.max_len = max_len
-        self.page_size = page_size
-        self.use_kernel = use_kernel
-        self.time_per_token = time_per_token
-        self.factor_cache = factor_cache
-        self._engines: Dict[tuple, ServeEngine] = {}
-
-    def _engine(self, n_slots: int, seg: int, max_new: int) -> ServeEngine:
-        key = (n_slots, seg, max_new)
-        eng = self._engines.get(key)
-        if eng is None:
-            eng = ServeEngine(self.cfg, self.params, self.policy,
-                              n_slots=n_slots, max_len=self.max_len,
-                              page_size=self.page_size, segment_len=seg,
-                              max_new_cap=max_new,
-                              use_kernel=self.use_kernel,
-                              time_per_token=self.time_per_token,
-                              factor_cache=self.factor_cache)
-            self._engines[key] = eng
-        else:
-            eng.reset()
-        return eng
-
-    def generate(self, prompts: jnp.ndarray, n_tokens: int,
-                 segment_len: Optional[int] = None) -> Dict:
-        """prompts: (b, s0) int32. Greedy decode of n_tokens per stream.
-
-        Returns tokens (b, n_tokens), the per-step per-stream rank record,
-        warm-decode ``tok_per_s`` and the separated ``compile_s`` /
-        ``prefill_s`` costs."""
-        seg = segment_len or self.cfg.rank.segment_len
-        prompts_np = np.asarray(prompts, np.int32)
-        b = prompts_np.shape[0]
-        eng = self._engine(b, seg, n_tokens)
-        for i in range(b):
-            eng.submit(Request(rid=i, tokens=prompts_np[i],
-                               max_new=n_tokens))
-        eng.warmup()
-        outs = eng.run()
-        tokens = np.stack([outs[i] for i in range(b)])
-        s = eng.stats
-        return {
-            "tokens": jnp.asarray(tokens),
-            "ranks": [r.tolist() for r in eng.ranks_per_step()],
-            "tok_per_s": s["tokens_decoded"] / max(s["decode_s"], 1e-9),
-            "compile_s": s["compile_s"],
-            "prefill_s": s["prefill_s"],
-            "token_lat_s": list(eng.token_latencies),   # [] unless timed
-            "stats": dict(s),
-        }
+__all__ = ["AdaptiveServer", "main"]
 
 
 def main(argv=None):
@@ -99,6 +27,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size (0 = legacy one-shot prefill)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -108,15 +38,29 @@ def main(argv=None):
     if cfg.rank.mode == "drrl":
         from repro.core.drrl import init_agent
         policy = init_agent(jax.random.PRNGKey(7), cfg.rank, cfg.d_model)
-    server = AdaptiveServer(cfg, params, policy,
-                            max_len=args.prompt_len + args.tokens + 8)
+    eng = Engine(cfg, params, policy, config=EngineConfig(
+        n_slots=args.batch, max_len=args.prompt_len + args.tokens + 8,
+        segment_len=16, max_new_cap=args.tokens,
+        prefill_chunk=args.chunk or None,
+        sampling=False))      # greedy-only CLI: keep the lean step
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    res = server.generate(prompts, args.tokens, segment_len=16)
-    print(f"decoded {res['tokens'].shape} at {res['tok_per_s']:.1f} tok/s "
-          f"(compile {res['compile_s']:.2f}s, prefill {res['prefill_s']:.2f}s); "
-          f"per-slot rank schedule: {res['ranks'][:8]}...")
+    import numpy as np
+    handles = [eng.submit(np.asarray(prompts[i]),
+                          SamplingParams(max_new=args.tokens))
+               for i in range(args.batch)]
+    eng.warmup()
+    eng.run()
+    s = eng.stats
+    tps = s["tokens_decoded"] / max(s["decode_s"], 1e-9)
+    ranks = eng.core.ranks_per_step()
+    print(f"decoded ({args.batch}, {args.tokens}) at {tps:.1f} tok/s "
+          f"(compile {s['compile_s']:.2f}s, prefill {s['prefill_s']:.2f}s, "
+          f"mixed steps {s['mixed_steps']}); "
+          f"per-slot rank schedule: {[r.tolist() for r in ranks[:8]]}...")
+    print(f"TTFT per request: "
+          f"{['%.3fs' % h.ttft_s for h in handles if h.ttft_s is not None]}")
 
 
 if __name__ == "__main__":

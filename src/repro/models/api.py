@@ -20,8 +20,10 @@ class ModelFns(NamedTuple):
     init_cache: Callable[..., Any]              # (batch, max_len) -> cache
     decode_step: Callable[..., Any]             # (params, cache, tokens) -> (logits, cache)
     input_specs: Callable[[ShapeCell], Dict[str, Any]]
-    # continuous-batching fused step over a slot-paged cache (repro.serve);
-    # None for families the serving engine does not cover yet
+    # continuous-batching fused step over a slot-paged cache (repro.serve):
+    # per-row kv_len/rank, and per-row query chunks (q_lens/prefill_rows)
+    # so chunked prefill interleaves into the same executable; None for
+    # families the serving engine does not cover yet
     decode_step_paged: Optional[Callable[..., Any]] = None
 
 

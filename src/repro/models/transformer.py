@@ -297,21 +297,36 @@ def decode_step_dense(cfg: ModelConfig, params, cache, tokens, *,
 def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                       tokens, *, slot_lens, slot_ranks=None, basis=None,
                       active=None, use_kernel: bool = False,
-                      kt_pool=None, mass_pool=None):
+                      kt_pool=None, mass_pool=None,
+                      q_lens=None, prefill_rows=None):
     """One fused decode step over every serving slot of a slot-paged cache
     (repro.serve): heterogeneous streams share ONE executable.
 
     pool_k/pool_v: (L, P, page_size, hkv, dh) shared page pools;
     page_table: (n_slots, pages_per_slot) physical page ids (page 0 is the
-    scratch page); tokens: (n_slots, 1) int32; slot_lens: (n_slots,) valid
-    prefix length per slot BEFORE this token; slot_ranks: (n_slots,) rank
-    bucket per slot with basis (L, n_slots, hkv, dh, r_max) the per-slot
-    segment eigenbases (both None only for rank mode 'off'); active:
-    (n_slots,) bool — inactive rows write to the scratch page and their
-    logits are garbage the engine ignores.
+    scratch page); tokens: (n_slots, C) int32 (C = 1 for pure decode);
+    slot_lens: (n_slots,) valid prefix length per slot BEFORE this step;
+    slot_ranks: (n_slots,) rank bucket per slot with basis
+    (L, n_slots, hkv, dh, r_max) the per-slot segment eigenbases (both
+    None only for rank mode 'off'); active: (n_slots,) bool — inactive
+    rows write to the scratch page and their logits are garbage the
+    engine ignores.
 
-    Per-row dynamic shape is expressed statically: kv_len is a vector
-    consumed by the attention mask (or the per-row flash-decode kernel when
+    **Chunked prefill** (repro.serve.api): with C > 1 each row carries a
+    block of query tokens. ``q_lens`` (n_slots,) gives the number of valid
+    queries per row (1 for decode rows, up to C for a mid-prefill row's
+    prompt chunk) and ``prefill_rows`` (n_slots,) bool marks rows that are
+    mid-prefill: those attend **full-rank dense** (their segment basis
+    does not exist yet; one-shot-prefill parity requires the untouched
+    forward), causally within the chunk, while decode rows in the same
+    executable keep the factor-projected rank path — the two score reads
+    are built at head-dim width (factor columns zero-padded, adding exact
+    0.0 terms) and selected per row. Returned logits are the **last valid
+    query's** per row: the next decode token for decode rows, the first
+    generated token for a row finishing its prompt, garbage mid-prompt.
+
+    Per-row dynamic shape is expressed statically: per-(row, query) kv_len
+    feeds the attention mask (or the per-row flash-decode kernel when
     ``use_kernel``), and per-row rank is factor padding + rank masking —
     the projected q factors are padded to r_max columns with columns beyond
     the slot's rank zeroed, so the widened score contraction only adds
@@ -321,15 +336,20 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     ``kt_pool`` (L, P, page_size, hkv, r_max), when given, is the paged K
     cache in factor form kt = K . B_r under each slot's segment basis: the
     score contraction then reads the factor pages (r_max/d of the dense K
-    bytes) instead of gathering + projecting dense K. The new token's
-    factor is appended in-graph; dense K is still written (basis refresh /
-    drift need it) but not read here.
+    bytes) instead of gathering + projecting dense K. New tokens' factors
+    are appended in-graph; dense K is still written (basis refresh /
+    drift need it) but not read there. A mid-prefill row's appended
+    factors are placeholders — its first segment decision re-projects the
+    whole slot before any factor read.
 
     ``mass_pool`` (L, P, page_size, hkv), when given, accumulates each
     key's received softmax mass in-graph (group-mean over the q heads of
     each kv head): the weighted-Gram input of the next segment decision.
-    The new token's cell is reset before the scatter-add, so recycled
-    pages never leak a previous occupant's mass into a live stream.
+    A prefill chunk's queries scatter their causal mass over the full
+    prefix — chunk-by-chunk accumulation reproduces the one-shot prompt
+    seed, so the weighted basis still sees the whole prompt's mass. Newly
+    written cells are reset before the scatter-add, so recycled pages
+    never leak a previous occupant's mass into a live stream.
 
     Returns (logits (n_slots, 1, V), pools) with pools a dict holding the
     updated ``k``/``v`` pools plus ``kt``/``mass`` when those were given.
@@ -344,7 +364,7 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
         raise ValueError("kt_pool/mass_pool require the rank path")
     dtype = nn.dt(cfg.dtype)
     x = params["embed"][tokens].astype(dtype)
-    ns = tokens.shape[0]
+    ns, C = tokens.shape
     hq, hkv = cfg.num_heads, cfg.num_kv_heads
     dh = cfg.resolved_head_dim()
     d = cfg.d_model
@@ -353,15 +373,30 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     n_pp = page_table.shape[1]
     M = n_pp * ps
     rcfg = cfg.rank
+    # ``mixed`` is trace-time static: the pure-decode executable keeps the
+    # lean factor-only read path; the mixed executable builds both score
+    # reads and selects per row
+    mixed = prefill_rows is not None
     if active is None:
         active = jnp.ones((ns,), bool)
-    positions = jnp.broadcast_to(slot_lens[:, None], (ns, 1))
-    # physical write coordinates for the new token (scratch for dead lanes)
-    pg = (slot_lens // ps)[:, None]
-    phys = jnp.where(active, jnp.take_along_axis(page_table, pg, axis=1)[:, 0], 0)
-    off = jnp.where(active, slot_lens % ps, 0)
-    kv_len = slot_lens + 1
-    valid = jnp.arange(M)[None, :] < kv_len[:, None]            # (ns, M)
+    if q_lens is None:
+        q_lens = jnp.ones((ns,), jnp.int32)
+    is_pf = (jnp.zeros((ns,), bool) if prefill_rows is None
+             else prefill_rows & active)
+    j_idx = jnp.arange(C)[None, :]                            # (1, C)
+    positions = slot_lens[:, None] + j_idx                    # (ns, C)
+    # physical write coordinates for the new tokens (scratch for dead
+    # lanes and for padding columns beyond a row's q_len)
+    write_ok = (j_idx < q_lens[:, None]) & active[:, None]
+    pg = jnp.minimum(positions // ps, n_pp - 1)
+    phys = jnp.where(write_ok, jnp.take_along_axis(page_table, pg, axis=1), 0)
+    off = jnp.where(write_ok, positions % ps, 0)
+    kv_end = slot_lens + q_lens                               # keys after write
+    # per-(row, query) visible length; padding queries clamp to the last
+    # valid query's window so no softmax row is ever fully masked
+    kv_len_q = (slot_lens[:, None]
+                + jnp.minimum(j_idx, q_lens[:, None] - 1) + 1)  # (ns, C)
+    valid = jnp.arange(M)[None, :] < kv_end[:, None]            # (ns, M)
     score_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
         cfg.softmax_dtype]
     scale = dh ** -0.5
@@ -385,8 +420,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
             v = v + p["bv"].reshape(hkv, dh).astype(x.dtype)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-        kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
-        vp = vp.at[phys, off].set(v[:, 0].astype(vp.dtype))
+        kp = kp.at[phys, off].set(k.astype(kp.dtype))
+        vp = vp.at[phys, off].set(v.astype(vp.dtype))
         vg = vp[page_table].reshape(ns, M, hkv, dh)
         if rcfg.mode == "off" or slot_ranks is None:
             kg = kp[page_table].reshape(ns, M, hkv, dh)
@@ -401,58 +436,75 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
             # the k side needs no mask)
             b_q = (jnp.repeat(basis_l, n_rep, axis=1) if n_rep > 1
                    else basis_l)                         # (ns, hq, d, r)
-            q_use = (jnp.einsum("bshd,bhdr->bshr", q.astype(jnp.float32),
-                                b_q)
-                     * col_ok[:, None, None, :]).astype(x.dtype)
+            q_proj = (jnp.einsum("bshd,bhdr->bshr", q.astype(jnp.float32),
+                                 b_q)
+                      * col_ok[:, None, None, :]).astype(x.dtype)
             if ktp is not None:
-                # factor-form cache: append the new token's factor and
+                # factor-form cache: append the new tokens' factors and
                 # read the paged factors — r/d of the dense K bytes
                 kt_new = jnp.einsum("bshd,bhdr->bshr",
                                     k.astype(jnp.float32), basis_l)
-                ktp = ktp.at[phys, off].set(kt_new[:, 0].astype(ktp.dtype))
+                ktp = ktp.at[phys, off].set(kt_new.astype(ktp.dtype))
                 ktg = ktp[page_table].reshape(ns, M, hkv, r_keep)
-                k_use = (ktg * valid[:, :, None, None].astype(ktg.dtype)
+                k_fac = (ktg * valid[:, :, None, None].astype(ktg.dtype)
                          ).astype(x.dtype)
             else:
                 kg = kp[page_table].reshape(ns, M, hkv, dh)
                 k_masked = kg * valid[:, :, None, None].astype(kg.dtype)
-                k_use = jnp.einsum("bmhd,bhdr->bmhr",
+                k_fac = jnp.einsum("bmhd,bhdr->bmhr",
                                    k_masked.astype(jnp.float32),
                                    basis_l).astype(x.dtype)
+            if not mixed:
+                q_use, k_use = q_proj, k_fac
+            else:
+                # mid-prefill rows attend full-rank dense; decode rows
+                # keep the factor read. Pad the factor side to head-dim
+                # width (exact zeros) and select per row.
+                kg = kp[page_table].reshape(ns, M, hkv, dh)
+                k_dense = kg * valid[:, :, None, None].astype(kg.dtype)
+                pad = ((0, 0), (0, 0), (0, 0), (0, dh - r_keep))
+                q_use = jnp.where(is_pf[:, None, None, None], q,
+                                  jnp.pad(q_proj, pad))
+                k_use = jnp.where(is_pf[:, None, None, None], k_dense,
+                                  jnp.pad(k_fac, pad))
         probs = None
         if use_kernel:
             from repro.kernels.ops import decode_attention
+            qk = jnp.swapaxes(q_use, 1, 2)               # (ns, hq, C, r)
             res = decode_attention(
-                jnp.swapaxes(q_use, 1, 2)[:, :, 0],      # (ns, hq, r)
+                qk if mixed or C > 1 else qk[:, :, 0],
                 jnp.swapaxes(k_use, 1, 2),               # (ns, hkv, M, r)
                 jnp.swapaxes(vg, 1, 2),                  # (ns, hkv, M, dh)
-                kv_len, scale=scale,
+                kv_end, scale=scale, q_start=slot_lens,
                 return_probs=mp is not None)
             if mp is not None:
-                o, probs = res                           # probs (ns, hq, M)
-                o = o[:, None]
+                o, probs = res                       # probs (ns, hq, [C,] M)
             else:
-                o = res[:, None]                         # (ns, 1, hq, dh)
+                o = res
+            if o.ndim == 3:
+                o, probs = o[:, :, None], (None if probs is None
+                                           else probs[:, :, None])
+            o = jnp.swapaxes(o, 1, 2)                    # (ns, C, hq, dh)
         else:
             res = attend(q_use, repeat_kv(k_use, n_rep), repeat_kv(vg, n_rep),
                          scale=scale, causal=False,
-                         kv_len=kv_len[:, None, None, None],
+                         kv_len=kv_len_q[:, None, :, None],
                          score_dtype=score_dtype,
                          return_probs=mp is not None)
             if mp is not None:
-                o, pr = res
-                probs = pr[:, :, 0, :]                   # (ns, hq, M)
+                o, probs = res                           # probs (ns, hq, C, M)
             else:
                 o = res
         if mp is not None:
             # per-key attention mass: group-mean over each kv head's q
-            # heads, masked to live lanes. Reset the appended token's cell
-            # first — a recycled page must not seed the new key with a
-            # previous occupant's mass.
+            # heads, masked to live lanes and valid queries. Reset the
+            # appended tokens' cells first — a recycled page must not seed
+            # a new key with a previous occupant's mass.
             from repro.models.common import kv_group_mean
-            mp = mp.at[phys, off].set(jnp.zeros((ns, hkv), mp.dtype))
-            w_tok = (kv_group_mean(probs.astype(jnp.float32), hkv)
-                     * active[:, None, None])
+            mp = mp.at[phys, off].set(jnp.zeros((ns, C, hkv), mp.dtype))
+            w = (probs.astype(jnp.float32)
+                 * write_ok[:, None, :, None]).sum(axis=2)   # (ns, hq, M)
+            w_tok = kv_group_mean(w, hkv)
             w_sc = jnp.swapaxes(w_tok, 1, 2).reshape(ns, n_pp, ps, hkv)
             mp = mp.at[page_table].add(w_sc.astype(mp.dtype))
         x = x + jnp.einsum("bshf,hfd->bsd", o,
@@ -482,6 +534,10 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     x, (nk, nv, n_extra) = scan_or_unroll(
         body, x, (params["layers"], pool_k, pool_v, basis_xs, extra_xs),
         unroll=not cfg.scan_layers)
+    if C > 1:
+        # only each row's last valid query feeds the LM head: the next
+        # token for decode rows, token 0 for a row finishing its prompt
+        x = jnp.take_along_axis(x, (q_lens - 1)[:, None, None], axis=1)
     x = nn.rms_norm(x, params["ln_f"], cfg.rms_eps)
     head = params.get("lm_head", None)
     logits = (jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))

@@ -1,14 +1,25 @@
 """Continuous-batching serving engine (paper section 4.5.2 at scale).
 
+- api:       the public surface — EngineConfig + SamplingParams +
+             Engine.submit(prompt, params) -> RequestHandle with
+             incremental token streaming and per-request TTFT.
 - kv_cache:  slot-paged KV cache — a shared page pool + per-slot page
              tables, per-slot valid lengths / rank buckets / eigenbasis.
-- scheduler: request queue, admission (prefill on free slots), eviction.
+- scheduler: request queue, admission (free slots + page reservation,
+             chunked prompts tracked mid-prefill), eviction.
 - policy:    slot-indexed segment-level rank decision + eigenbasis refresh
              (ported from the old AdaptiveServer._decide_rank, no host
              syncs).
-- engine:    the step loop — one fused decode executable over all live
-             slots with per-row kv_len and per-row rank.
+- engine:    the step loop core — one fused decode executable over all
+             live slots with per-row kv_len, per-row rank, and chunked
+             prefill interleaved into the same step.
 """
+from repro.serve.api import (Engine, EngineConfig, RequestHandle,
+                             SamplingParams, make_engine)
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "EngineConfig", "RequestHandle", "SamplingParams",
+           "make_engine", "ServeEngine", "PagedKVCache", "Request",
+           "Scheduler"]

@@ -1,0 +1,391 @@
+"""Unified streaming serving API (paper §4.5.2 as a request/response
+surface).
+
+The engine-construction knobs live in one :class:`EngineConfig`
+(replacing the historical ``ServeEngine(...)`` kwarg pile), per-request
+generation knobs in :class:`SamplingParams` (greedy by default; seeded
+temperature / top-k run **in-graph** in the fused step — one executable
+regardless of the mix of greedy and sampled streams), and
+:meth:`Engine.submit` returns a :class:`RequestHandle` that streams
+tokens incrementally (iterator or callback) and records per-request TTFT.
+
+By default prompts are admitted via **chunked prefill**
+(``EngineConfig.prefill_chunk``): the prompt is consumed a fixed-size
+chunk at a time *inside* the fused decode step, alongside the live decode
+rows — admission never stalls decoding, and prompts of any length share
+one executable instead of one compile per length bucket
+(``prefill_chunk=None`` restores the legacy blocking bucketed prefill).
+Chunked and one-shot admission are token-for-token identical
+(tests/test_serve_chunked.py).
+
+    cfg = EngineConfig(n_slots=4, max_len=256)
+    eng = Engine(model_cfg, params, config=cfg)
+    h = eng.submit(prompt_ids, SamplingParams(max_new=64))
+    for tok in h.tokens():          # drives eng.step() as needed
+        ...
+    # or: eng.run(); h.result()
+
+The explicit step loop (``eng.step()`` / ``eng.run()``) stays available
+for servers that multiplex many handles.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation knobs.
+
+    ``temperature == 0`` (the default) is greedy argmax; ``top_k == 0``
+    samples the full vocabulary. ``seed`` keys a per-token PRNG fold —
+    a stream's draw sequence is a pure function of (seed, token index),
+    reproducible under any batching/admission interleaving."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    max_new: int = 64
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"negative temperature {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"negative top_k {self.top_k}")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Engine-level serving knobs (one compile scope).
+
+    ``prefill_chunk``: prompt tokens consumed per fused step while a
+    stream is mid-prefill (chunked prefill interleaved into decode);
+    ``None`` = legacy blocking length-bucketed prefill at admission.
+    ``sampling=False`` compiles the lean greedy-only step (requests with
+    temperature/top_k then fail fast at submit)."""
+    n_slots: int = 4
+    max_len: int = 256
+    page_size: int = 16
+    segment_len: Optional[int] = None
+    max_new_cap: int = 256
+    prefill_chunk: Optional[int] = 16
+    use_kernel: bool = False
+    drift_threshold: Optional[float] = None
+    factor_cache: Optional[bool] = None
+    time_per_token: bool = False
+    sampling: bool = True
+    top_k_cap: int = 64
+    buckets: Optional[Sequence[int]] = None
+
+    def __post_init__(self):
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.max_len < 1 or self.n_slots < 1 or self.page_size < 1:
+            raise ValueError("n_slots/max_len/page_size must be >= 1")
+
+
+@dataclass
+class RequestHandle:
+    """One submitted request: incremental tokens + completion state."""
+    rid: int
+    prompt_len: int
+    params: SamplingParams
+    _engine: "Engine"
+    _submit_s: float
+    on_token: Optional[Callable[[int, int], None]] = None
+    _toks: List[int] = field(default_factory=list)
+    _result: Optional[np.ndarray] = None
+    ttft_s: Optional[float] = None   # submit() -> first-token wall time
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def tokens(self):
+        """Generator of generated token ids, in order, driving
+        ``engine.step()`` whenever it runs dry. Attaching a consumer makes
+        the engine sync emitted token values each step (the same per-step
+        sync an ``eos_id`` request already pays); handles that never
+        stream keep the sync-free loop and read results at eviction."""
+        self._engine._ensure_streaming(self)
+        i = 0
+        while True:
+            while i < len(self._toks):
+                yield self._toks[i]
+                i += 1
+            if self.done:
+                return
+            self._engine.step()
+
+    def result(self) -> np.ndarray:
+        """Block until this request finishes; returns its generated ids."""
+        while not self.done:
+            self._engine.step()
+        return self._result
+
+    # -- called by Engine ------------------------------------------------
+
+    def _feed(self, idx: int, tok: int) -> None:
+        """Deliver token ``idx``. Strictly in-order: anything already
+        delivered is ignored, and a gap (idx beyond the next slot) is
+        refused — the engine backfills from the device buffer first, so a
+        consumer never sees a garbled sequence."""
+        if idx != len(self._toks):
+            return
+        self._toks.append(tok)
+        if self.ttft_s is None and idx == 0:
+            self.ttft_s = time.perf_counter() - self._submit_s
+        if self.on_token is not None:
+            self.on_token(idx, tok)
+
+    def _finish(self, out: np.ndarray, first_tok_t: Optional[float]) -> None:
+        # TTFT first: the backfill below would otherwise stamp token 0
+        # with completion time on a handle that never streamed
+        if self.ttft_s is None and first_tok_t is not None:
+            self.ttft_s = first_tok_t - self._submit_s
+        for i in range(len(self._toks), len(out)):
+            self._feed(i, int(out[i]))
+        self._result = np.asarray(out, np.int32)
+
+
+class Engine:
+    """Streaming request/response front-end over the continuous-batching
+    core (:class:`repro.serve.ServeEngine`): ``submit() -> RequestHandle``,
+    an explicit ``step()``/``run()`` loop, incremental token delivery and
+    per-request TTFT."""
+
+    def __init__(self, cfg: ModelConfig, params, policy_params=None, *,
+                 config: Optional[EngineConfig] = None):
+        self.config = config or EngineConfig()
+        c = self.config
+        self.core = ServeEngine(
+            cfg, params, policy_params,
+            n_slots=c.n_slots, max_len=c.max_len, page_size=c.page_size,
+            segment_len=c.segment_len, buckets=c.buckets,
+            max_new_cap=c.max_new_cap, use_kernel=c.use_kernel,
+            drift_threshold=c.drift_threshold,
+            time_per_token=c.time_per_token, factor_cache=c.factor_cache,
+            prefill_chunk=c.prefill_chunk, sampling=c.sampling,
+            top_k_cap=c.top_k_cap)
+        self._handles: Dict[int, RequestHandle] = {}
+        self._next_rid = 0
+        self._finished_seen = 0
+        self._streaming: set = set()     # rids with an attached consumer
+
+    # -- request plane ---------------------------------------------------
+
+    def submit(self, prompt, params: Optional[SamplingParams] = None, *,
+               arrival: int = 0,
+               on_token: Optional[Callable[[int, int], None]] = None
+               ) -> RequestHandle:
+        """Enqueue ``prompt`` (1-D int ids). Validation is fail-fast: a
+        request that could never be served (prompt + max_new beyond a
+        slot's capacity, max_new beyond the engine cap, negative arrival,
+        top_k beyond the compiled cap, sampling on a greedy-only engine)
+        raises here instead of queueing forever."""
+        params = params or SamplingParams()
+        rid = self._next_rid
+        req = Request(rid=rid, tokens=np.asarray(prompt, np.int32),
+                      max_new=params.max_new, arrival=arrival,
+                      eos_id=params.eos_id, temperature=params.temperature,
+                      top_k=params.top_k, seed=params.seed)
+        self.core.submit(req)                 # may raise — rid not consumed
+        self._next_rid += 1
+        h = RequestHandle(rid=rid, prompt_len=len(req.tokens), params=params,
+                          _engine=self, _submit_s=time.perf_counter(),
+                          on_token=on_token)
+        self._handles[rid] = h
+        if on_token is not None:
+            self._streaming.add(rid)
+            self.core._stream_sync = True
+        return h
+
+    def _ensure_streaming(self, handle: RequestHandle) -> None:
+        if handle.done:
+            return        # tokens already delivered; nothing left to sync
+        self._streaming.add(handle.rid)
+        self.core._stream_sync = True
+        self._backfill(handle)
+
+    def _backfill(self, handle: RequestHandle) -> None:
+        """Deliver any tokens this handle's slot emitted before (or
+        between) streamed steps, straight from the device output buffer —
+        keeps delivery contiguous when a consumer attaches mid-run."""
+        for i, st in enumerate(self.core.sched.slots):
+            if st.active and st.req.rid == handle.rid:
+                if st.n_out > len(handle._toks):
+                    out = np.asarray(self.core.out_buf[i, :st.n_out])
+                    for j in range(len(handle._toks), st.n_out):
+                        handle._feed(j, int(out[j]))
+                return
+
+    # -- step loop -------------------------------------------------------
+
+    def warmup(self) -> float:
+        dt = self.core.warmup()
+        # compile time is reported separately (stats['compile_s']); a
+        # handle submitted before warmup should not charge it to TTFT
+        now = time.perf_counter()
+        for h in self._handles.values():
+            if not h.done and h.ttft_s is None:
+                h._submit_s = max(h._submit_s, now)
+        return dt
+
+    def step(self) -> bool:
+        """One engine iteration; returns True while work remains.
+
+        Every step accrues its wall time (minus any in-loop prefill) into
+        ``stats['decode_s']``, so throughput stays honest no matter what
+        drives the loop — ``run()``, a ``RequestHandle`` iterator, or an
+        external server loop."""
+        stats = self.core.stats
+        p0 = stats["prefill_s"]
+        t0 = time.perf_counter()
+        self.core.step()
+        stats["decode_s"] += max(
+            time.perf_counter() - t0 - (stats["prefill_s"] - p0), 0.0)
+        for rid, idx, tok in self.core.last_emitted:
+            h = self._handles.get(rid)
+            if h is not None:
+                if idx > len(h._toks):
+                    self._backfill(h)     # close the gap before delivering
+                h._feed(idx, tok)
+        finished = self.core.sched.finished
+        for req, out in finished[self._finished_seen:]:
+            h = self._handles.get(req.rid)
+            if h is not None and not h.done:
+                h._finish(np.asarray(out, np.int32),
+                          self.core.request_first_tok_t.get(req.rid))
+            self._streaming.discard(req.rid)
+        self._finished_seen = len(finished)
+        if not self._streaming:
+            # last streaming consumer done: restore the sync-free loop
+            self.core._stream_sync = False
+        return not self.core.sched.done()
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drive the loop until every submitted request finished."""
+        import jax
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        # attribute the tail of in-flight device work to decode time
+        t0 = time.perf_counter()
+        jax.block_until_ready(self.core.out_buf)
+        self.core.stats["decode_s"] += time.perf_counter() - t0
+        return {rid: h._result for rid, h in self._handles.items()
+                if h.done}
+
+    def reset(self) -> None:
+        """Drop all requests/handles but keep the compiled executables."""
+        self.core.reset()
+        self._handles.clear()
+        self._finished_seen = 0
+        self._streaming.clear()
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def stats(self) -> Dict:
+        return self.core.stats
+
+    def ttft(self) -> Dict[int, float]:
+        """Per-request submit()->first-token wall seconds (finished or
+        streaming requests only)."""
+        return {rid: h.ttft_s for rid, h in self._handles.items()
+                if h.ttft_s is not None}
+
+
+def make_engine(cfg: ModelConfig, params, policy_params=None,
+                **knobs) -> Engine:
+    """Convenience: ``make_engine(cfg, params, n_slots=8, max_len=512)``
+    builds the EngineConfig from keyword overrides."""
+    return Engine(cfg, params, policy_params, config=EngineConfig(**knobs))
+
+
+class AdaptiveServer:
+    """DEPRECATED lock-step front-end, kept as a compatibility shim over
+    :class:`Engine`: a (b, s0) prompt batch becomes b concurrent streams
+    admitted at step 0, decoded greedily for ``n_tokens`` each, via the
+    legacy one-shot bucketed prefill (token-for-token identical to the
+    chunked default). New code should construct :class:`Engine` with an
+    :class:`EngineConfig` and use ``submit``/``RequestHandle``."""
+
+    def __init__(self, cfg: ModelConfig, params, policy_params=None,
+                 max_len: int = 2048, page_size: int = 16,
+                 use_kernel: bool = False, time_per_token: bool = False,
+                 factor_cache: Optional[bool] = None):
+        warnings.warn(
+            "AdaptiveServer is deprecated; use repro.serve.api.Engine "
+            "(EngineConfig + submit/RequestHandle) instead",
+            DeprecationWarning, stacklevel=2)
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy_params
+        self.max_len = max_len
+        self.page_size = page_size
+        self.use_kernel = use_kernel
+        self.time_per_token = time_per_token
+        self.factor_cache = factor_cache
+        self._engines: Dict[tuple, Engine] = {}
+
+    def _engine(self, n_slots: int, seg: int, max_new: int) -> Engine:
+        key = (n_slots, seg, max_new)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = Engine(self.cfg, self.params, self.policy,
+                         config=EngineConfig(
+                             n_slots=n_slots, max_len=self.max_len,
+                             page_size=self.page_size, segment_len=seg,
+                             max_new_cap=max_new, prefill_chunk=None,
+                             sampling=False, use_kernel=self.use_kernel,
+                             time_per_token=self.time_per_token,
+                             factor_cache=self.factor_cache))
+            self._engines[key] = eng
+        else:
+            eng.reset()
+        return eng
+
+    def generate(self, prompts, n_tokens: int,
+                 segment_len: Optional[int] = None) -> Dict:
+        """prompts: (b, s0) int32. Greedy decode of n_tokens per stream.
+
+        Returns tokens (b, n_tokens), the per-step per-stream rank record,
+        warm-decode ``tok_per_s`` and the separated ``compile_s`` /
+        ``prefill_s`` costs."""
+        seg = segment_len or self.cfg.rank.segment_len
+        prompts_np = np.asarray(prompts, np.int32)
+        b = prompts_np.shape[0]
+        eng = self._engine(b, seg, n_tokens)
+        handles = [eng.submit(prompts_np[i],
+                              SamplingParams(max_new=n_tokens))
+                   for i in range(b)]
+        eng.warmup()
+        eng.run()
+        tokens = np.stack([h.result() for h in handles])
+        core = eng.core
+        s = core.stats
+        return {
+            "tokens": tokens,
+            "ranks": [r.tolist() for r in core.ranks_per_step()],
+            "tok_per_s": s["tokens_decoded"] / max(s["decode_s"], 1e-9),
+            "compile_s": s["compile_s"],
+            "prefill_s": s["prefill_s"],
+            "token_lat_s": list(core.token_latencies),  # [] unless timed
+            "ttft_s": [h.ttft_s for h in handles],
+            "stats": dict(s),
+        }

@@ -1,11 +1,8 @@
 """Continuous-batching serving engine.
 
-One engine = one slot-paged KV cache + one scheduler + three executables:
+One engine = one slot-paged KV cache + one scheduler + a small set of
+compiled executables:
 
-  * a length-bucketed **prefill** (full-rank forward over the padded
-    prompt that also captures per-layer q/k/v; one compile per bucket,
-    reused across requests) — the captured q/k seed the slot's per-key
-    attention-mass accumulator,
   * a slot-indexed **segment decision** (serve.policy) that re-picks a
     boundary slot's rank bucket from its live softmax-weighted layer-0 K
     spectra, refreshes its cached per-layer eigenbasis, and (in factor
@@ -13,13 +10,25 @@ One engine = one slot-paged KV cache + one scheduler + three executables:
     per boundary crossing,
   * ONE fused **decode step** over all slots (models.transformer.
     decode_step_paged): per-row kv_len, per-row rank via factor padding +
-    rank masking, in-graph attention-mass accumulation, and (by default)
-    a factor-form score read ``kt = K . B_r`` that touches r_max/d of the
-    dense K bytes — heterogeneous streams never force a recompile.
+    rank masking, in-graph attention-mass accumulation, in-graph
+    temperature/top-k sampling, and (by default) a factor-form score read
+    ``kt = K . B_r`` that touches r_max/d of the dense K bytes —
+    heterogeneous streams never force a recompile,
+  * prompt admission, in one of two modes:
+      - **chunked prefill** (``prefill_chunk=C``, the repro.serve.api
+        default): prompts are consumed C tokens at a time *inside* a
+        mixed fused step that carries the live decode rows alongside —
+        admission never stalls decoding, prompts of any length share one
+        executable (no compile per length bucket), and the chunk's causal
+        attention mass accumulates into the slot's mass pool so the
+        weighted-Gram basis still sees the full prompt mass;
+      - **one-shot** (``prefill_chunk=None``, the legacy default): a
+        length-bucketed full-rank prefill forward (one compile per
+        bucket) runs at admission, blocking the loop while it prefills.
 
 The step loop is host-side control only; lengths / ranks / tokens stay on
 device between steps (token values are synced per step only when a live
-request carries an ``eos_id``).
+request carries an ``eos_id`` or a streaming consumer is attached).
 """
 from __future__ import annotations
 
@@ -48,7 +57,9 @@ class ServeEngine:
                  max_new_cap: int = 256, use_kernel: bool = False,
                  drift_threshold: Optional[float] = None,
                  time_per_token: bool = False,
-                 factor_cache: Optional[bool] = None):
+                 factor_cache: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = None,
+                 sampling: bool = False, top_k_cap: int = 64):
         self.cfg, self.params, self.policy = cfg, params, policy_params
         self.seg = int(segment_len or cfg.rank.segment_len)
         self.n_slots = n_slots
@@ -56,6 +67,15 @@ class ServeEngine:
         self.use_kernel = use_kernel
         self.drift_threshold = drift_threshold
         self.time_per_token = time_per_token
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.chunk = prefill_chunk
+        # sampling=True compiles the temperature/top-k/gumbel tail into the
+        # fused step (static flag: greedy-only engines keep the plain
+        # argmax executable). Greedy rows (temperature 0) stay bitwise
+        # identical either way.
+        self.sampling = sampling
+        self.top_k_cap = int(top_k_cap)
         # factor_cache=None -> factor form whenever the rank path is on
         # AND the widest bucket is below the head dim (otherwise the
         # factor pool saves nothing). True forces it on (error without a
@@ -80,6 +100,16 @@ class ServeEngine:
         donate = (() if jax.default_backend() == "cpu"
                   else (1, 2, 3, 4, 11))
         self._step = jax.jit(self._step_impl, donate_argnums=donate)
+        self._step_mixed = (jax.jit(self._step_mixed_impl,
+                                    donate_argnums=donate)
+                            if self.chunk is not None else None)
+        # token-0 selection for one-shot admission: the same in-graph
+        # sampling math the fused step applies, on the prefill's last
+        # prompt logits — a sampled stream draws identically whether its
+        # token 0 comes from a bucketed prefill or a finishing chunk
+        self._select1 = jax.jit(lambda lg, t, k, sd: self._select_token(
+            lg[None], jnp.zeros((1,), jnp.int32), t[None], k[None],
+            sd[None])[0])
         self._drift = (jax.jit(basis_drift)
                        if drift_threshold is not None else None)
         self._reset_state()
@@ -99,14 +129,33 @@ class ServeEngine:
         self._active_dev = None
         self._plen_dev = None
         self._lens_dev = None
+        # per-slot sampling state (host mirrors; device copies pushed with
+        # the control sync on admission)
+        self._temp = np.zeros((ns,), np.float32)
+        self._topk = np.zeros((ns,), np.int32)
+        self._seed = np.zeros((ns,), np.uint32)
+        self._temp_dev = self._topk_dev = self._seed_dev = None
+        self.prompt_buf = (jnp.zeros((ns, self.cache.max_len), jnp.int32)
+                           if self.chunk is not None else None)
         self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
                       "steps": 0, "tokens_decoded": 0, "prefills": 0,
-                      "decides": 0}
+                      "decides": 0, "mixed_steps": 0, "stall_s": 0.0}
         self.rank_history: List[Tuple[int, jnp.ndarray, np.ndarray]] = []
         # harvested at eviction: decode-step wall time per token (needs
         # time_per_token=True) and first-token (prefill) latency per request
         self.token_latencies: List[float] = []
         self.first_token_s: List[float] = []
+        # absolute perf_counter at each request's token-0 emission (the
+        # api layer turns this into submit-relative TTFT)
+        self.request_first_tok_t: Dict[int, float] = {}
+        # (rid, out_index, token) triples of the last step, filled only
+        # when the step synced token values (eos or _stream_sync)
+        self.last_emitted: List[Tuple[int, int, int]] = []
+        # streaming plane (repro.serve.api): when set, every step syncs
+        # the emitted tokens to host and records them in ``last_emitted``
+        # (the api layer turns it off again when the last streaming
+        # consumer finishes, restoring the sync-free loop)
+        self._stream_sync = False
 
     def reset(self):
         """Clear all serving state but keep the compiled executables."""
@@ -127,6 +176,12 @@ class ServeEngine:
             raise ValueError(
                 f"request needs {len(req.tokens) + req.max_new} cache "
                 f"positions but a slot holds only {self.cache.max_len}")
+        if (req.temperature > 0 or req.top_k > 0) and not self.sampling:
+            raise ValueError("request asks for sampling but the engine was "
+                             "built with sampling=False (greedy executable)")
+        if req.top_k > self.top_k_cap:
+            raise ValueError(f"top_k {req.top_k} > engine top_k_cap "
+                             f"{self.top_k_cap}")
         self.sched.submit(req)
 
     def warmup(self) -> float:
@@ -135,13 +190,14 @@ class ServeEngine:
         stats['compile_s'] so throughput numbers stay compile-free."""
         t0 = time.perf_counter()
         ns = self.n_slots
-        need = {bucket_for(len(r.tokens), self._buckets)
-                for r in self.sched.pending}
-        for bucket in sorted(need):
-            out = self._prefill(self.params,
-                                jnp.zeros((1, bucket), jnp.int32),
-                                np.int32(bucket))
-            jax.block_until_ready(out[0])
+        if self.chunk is None:
+            need = {bucket_for(len(r.tokens), self._buckets)
+                    for r in self.sched.pending}
+            for bucket in sorted(need):
+                out = self._prefill(self.params,
+                                    jnp.zeros((1, bucket), jnp.int32),
+                                    np.int32(bucket))
+                jax.block_until_ready(out[0])
         self._sync_control()
         if self._decide is not None:
             # donated args (basis/spectra/kt) must be re-captured; the
@@ -156,18 +212,23 @@ class ServeEngine:
             jax.block_until_ready(self.cache.basis)
         # all-lanes-inactive step: writes land on the scratch page / row,
         # so re-capturing the donated pools and out_buf is value-neutral
-        pools, tok, ob, _ = self._step(
-            self.params, self.cache.k_pool, self.cache.v_pool,
-            self.cache.kt_pool, self.cache.mass_pool,
-            self._pt_dev, self.tokens, self._lens_dev,
-            self.cache.ranks, self.cache.basis,
-            jnp.zeros((ns,), bool), self.out_buf,
-            self._plen_dev)
-        self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
-        self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
-        self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
-        self.out_buf = ob
-        jax.block_until_ready(tok)
+        runs = [(self._step, ())] + (
+            [(self._step_mixed, (self.prompt_buf,))]
+            if self._step_mixed is not None else [])
+        for fn, extra in runs:
+            pools, tok, ob, _ = fn(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                self.cache.kt_pool, self.cache.mass_pool,
+                self._pt_dev, self.tokens, self._lens_dev,
+                self.cache.ranks, self.cache.basis,
+                jnp.zeros((ns,), bool), self.out_buf,
+                self._plen_dev, self._temp_dev, self._topk_dev,
+                self._seed_dev, *extra)
+            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
+            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self.out_buf = ob
+            jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         self.stats["compile_s"] += dt
         return dt
@@ -188,9 +249,33 @@ class ServeEngine:
         mass = aux["layers"]["mass"] if self.cache.rank_on else None
         return logits, qkv["k"], qkv["v"], mass
 
+    def _select_token(self, logits, out_pos, temps, topks, seeds):
+        """Next token per row from (ns, V) logits. ``out_pos`` is each
+        row's output index (0 = first generated token): the sampling PRNG
+        folds (per-request seed, out_pos), so a stream's draw sequence is
+        a pure function of the request — identical under any batching,
+        admission mode, or chunking. Greedy rows (temperature 0) take the
+        plain argmax, bitwise identical to the sampling-free executable."""
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not self.sampling:
+            return greedy
+        ns, V = logits.shape
+        kcap = min(self.top_k_cap, V)
+        kth = jax.lax.top_k(logits, kcap)[0]                  # (ns, kcap)
+        sel = jnp.clip(topks - 1, 0, kcap - 1)
+        thr = jnp.take_along_axis(kth, sel[:, None], 1)
+        masked = jnp.where((topks[:, None] > 0) & (logits < thr),
+                           -jnp.inf, logits)
+        keys = jax.vmap(lambda s, p: jax.random.fold_in(
+            jax.random.PRNGKey(s), p))(seeds, out_pos.astype(jnp.uint32))
+        g = jax.vmap(lambda k: jax.random.gumbel(k, (V,)))(keys)
+        t = jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jnp.argmax(masked / t + g, axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0, sampled, greedy)
+
     def _step_impl(self, params, pool_k, pool_v, kt_pool, mass_pool,
                    page_table, tokens, lens, ranks, basis, active, out_buf,
-                   prompt_lens):
+                   prompt_lens, temps, topks, seeds):
         ns = tokens.shape[0]
         off = self.cfg.rank.mode == "off"
         logits, pools = self.fns.decode_step_paged(
@@ -200,14 +285,53 @@ class ServeEngine:
             use_kernel=self.use_kernel,
             kt_pool=None if off else kt_pool,
             mass_pool=None if off else mass_pool)
-        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-        tok = jnp.where(active[:, None], tok, tokens)     # greedy
-        row = jnp.where(active, jnp.arange(ns), ns)       # dead -> scratch row
         out_idx = jnp.where(active, jnp.minimum(lens - prompt_lens + 1,
                                                 self.max_new_cap - 1), 0)
+        tok = self._select_token(logits[:, 0], out_idx,
+                                 temps, topks, seeds)[:, None]
+        tok = jnp.where(active[:, None], tok, tokens)
+        row = jnp.where(active, jnp.arange(ns), ns)       # dead -> scratch row
         out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
         lens = lens + active.astype(lens.dtype)
         return pools, tok, out_buf, lens
+
+    def _step_mixed_impl(self, params, pool_k, pool_v, kt_pool, mass_pool,
+                         page_table, tokens, lens, ranks, basis, active,
+                         out_buf, prompt_lens, temps, topks, seeds,
+                         prompt_buf):
+        """One mixed fused step: live decode rows advance one token while
+        mid-prefill rows consume the next ``chunk`` tokens of their prompt
+        from the device-resident ``prompt_buf`` — chunked prefill
+        interleaved into the decode step, no host work in between."""
+        ns, C = tokens.shape[0], self.chunk
+        off = self.cfg.rank.mode == "off"
+        is_pf = active & (lens < prompt_lens)
+        q_lens = jnp.where(is_pf, jnp.minimum(C, prompt_lens - lens),
+                           1).astype(jnp.int32)
+        idx = jnp.clip(lens[:, None] + jnp.arange(C)[None, :], 0,
+                       prompt_buf.shape[1] - 1)
+        chunk_toks = jnp.take_along_axis(prompt_buf, idx, axis=1)
+        toks_in = jnp.where(is_pf[:, None], chunk_toks,
+                            jnp.broadcast_to(tokens, (ns, C)))
+        logits, pools = self.fns.decode_step_paged(
+            params, pool_k, pool_v, page_table, toks_in,
+            slot_lens=lens, q_lens=q_lens, prefill_rows=is_pf,
+            slot_ranks=None if off else ranks,
+            basis=None if off else basis, active=active,
+            use_kernel=self.use_kernel,
+            kt_pool=None if off else kt_pool,
+            mass_pool=None if off else mass_pool)
+        lens_after = lens + jnp.where(active, q_lens, 0)
+        finishing = is_pf & (lens_after >= prompt_lens)
+        emit = active & (finishing | ~is_pf)
+        out_idx = jnp.where(emit, jnp.clip(lens_after - prompt_lens, 0,
+                                           self.max_new_cap - 1), 0)
+        tok = self._select_token(logits[:, 0], out_idx,
+                                 temps, topks, seeds)[:, None]
+        tok = jnp.where(emit[:, None], tok, tokens)
+        row = jnp.where(emit, jnp.arange(ns), ns)         # no-emit -> scratch
+        out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
+        return pools, tok, out_buf, lens_after
 
     def _sync_control(self) -> None:
         """Push host control state to device after admission/eviction; the
@@ -221,37 +345,70 @@ class ServeEngine:
             np.array([s.prompt_len if s.active else 0
                       for s in self.sched.slots], np.int32))
         self._lens_dev = jnp.asarray(self.cache.lens, jnp.int32)
+        self._temp_dev = jnp.asarray(self._temp)
+        self._topk_dev = jnp.asarray(self._topk)
+        self._seed_dev = jnp.asarray(self._seed)
         self._dirty = False
 
     def _admit(self) -> List[int]:
         placed = self.sched.admit(self.now, self.cache.allocate)
+        any_other_live = self.sched.n_live() > len(placed)
         for slot, req, bucket in placed:
+            st = self.sched.slots[slot]
+            st.admit_s = time.perf_counter()
+            # a recycled slot must not inherit its previous occupant's
+            # rank state: first decision is veto-free, fresh clock
+            self.has_rank[slot] = False
+            self.force_decide[slot] = False
+            self._temp[slot] = req.temperature
+            self._topk[slot] = req.top_k
+            self._seed[slot] = np.uint32(req.seed)
+            if self.chunk is not None:
+                # chunked admission: stage the prompt on device and let the
+                # mixed fused steps consume it — no model work here, the
+                # loop never stalls on a monolithic prefill
+                buf = np.zeros((self.cache.max_len,), np.int32)
+                buf[:len(req.tokens)] = req.tokens
+                self.prompt_buf = self.prompt_buf.at[slot].set(
+                    jnp.asarray(buf))
+                continue
             t0 = time.perf_counter()
             s = len(req.tokens)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :s] = req.tokens
             logits, k_l, v_l, mass_l = self._prefill(
                 self.params, jnp.asarray(padded), np.int32(s))
-            tok0 = jnp.argmax(logits[0, s - 1]).astype(jnp.int32)
+            if self.sampling and (req.temperature > 0 or req.top_k > 0):
+                tok0 = self._select1(logits[0, s - 1],
+                                     np.float32(req.temperature),
+                                     np.int32(req.top_k),
+                                     np.uint32(req.seed))
+            else:
+                tok0 = jnp.argmax(logits[0, s - 1]).astype(jnp.int32)
             mass = (None if mass_l is None else
                     jnp.swapaxes(mass_l[:, 0], 1, 2)[:, :s])  # (L, s, hkv)
             self.cache.write_prefill(slot, k_l[:, 0, :s], v_l[:, 0, :s],
                                      mass_layers=mass)
             self.tokens = self.tokens.at[slot, 0].set(tok0)
             self.out_buf = self.out_buf.at[slot, 0].set(tok0)
-            st = self.sched.slots[slot]
+            st.prefilled = s
             st.n_out = 1
-            # a recycled slot must not inherit its previous occupant's
-            # rank state: first decision is veto-free, fresh clock
-            self.has_rank[slot] = False
-            self.force_decide[slot] = False
             if req.eos_id is not None:
                 st.last_tok = int(tok0)
+            if self._stream_sync:
+                # one-shot admission emits token 0 outside the fused step:
+                # a streaming consumer must still see it in order
+                self.last_emitted.append((req.rid, 0, int(tok0)))
             jax.block_until_ready(self.cache.k_pool)
             dt = time.perf_counter() - t0
             self.stats["prefill_s"] += dt
             self.stats["prefills"] += 1
+            if any_other_live:
+                # blocking admission: this prefill ran while other streams
+                # had decode work pending — the stall chunked mode removes
+                self.stats["stall_s"] += dt
             st.latencies.append(dt)               # first-token latency
+            self.request_first_tok_t[req.rid] = time.perf_counter()
         if placed:
             self._dirty = True
         return [slot for slot, _, _ in placed]
@@ -259,7 +416,11 @@ class ServeEngine:
     def _maybe_decide(self) -> None:
         if self._decide is None:
             return
-        active = np.array([s.active for s in self.sched.slots])
+        # mid-prefill slots are excluded: their prompt mass / K run is
+        # still incomplete, and decode_i == 0 will still be a boundary at
+        # their first decode step
+        active = np.array([s.active and not s.mid_prefill
+                           for s in self.sched.slots])
         at_seg = np.array([s.decode_i % self.seg == 0
                            for s in self.sched.slots])
         boundary = active & (at_seg | self.force_decide)
@@ -308,32 +469,47 @@ class ServeEngine:
 
     def step(self) -> None:
         """One engine iteration: admit -> decide -> fused decode -> evict."""
-        self._admit()
+        self.last_emitted = []
+        self._admit()                             # may emit tok0 (one-shot)
         self._evict_finished()                    # max_new == 1 / instant EOS
         live = [i for i, s in enumerate(self.sched.slots) if s.active]
         if live:
+            slots = self.sched.slots
+            mid = [i for i in live if slots[i].mid_prefill]
+            decoding = [i for i in live if not slots[i].mid_prefill]
+            # chunk consumed per slot this step (host mirror of the mixed
+            # step's in-graph q_lens; 0 for decode rows here)
+            q_host = {i: min(self.chunk, slots[i].prompt_len
+                             - slots[i].prefilled) for i in mid}
+            finishing = [i for i in mid
+                         if slots[i].prefilled + q_host[i]
+                         == slots[i].prompt_len]
             # the timer starts before the segment decision: tokens decoded
             # in a boundary step really do wait on the decide dispatch
             t0 = time.perf_counter() if self.time_per_token else None
             self._maybe_decide()
-            if self.cache.factored:
+            if self.cache.factored and decoding:
                 # a factored slot's kt pages are only consistent after its
-                # first decision re-projects them (write_prefill seeds
-                # dense K/mass, not kt); decode_i == 0 is always a segment
-                # boundary so this holds — keep it explicit in case the
-                # decide trigger ever changes
-                assert all(self.has_rank[i] for i in live), \
+                # first decision re-projects them; decode_i == 0 is always
+                # a segment boundary so this holds — keep it explicit in
+                # case the decide trigger ever changes. Mid-prefill rows
+                # read dense K, so they are exempt.
+                assert all(self.has_rank[i] for i in decoding), \
                     "factored slot would read unseeded kt pages"
             self._sync_control()
+            active_dec = np.array([s.active and not s.mid_prefill
+                                   for s in self.sched.slots])
             self.rank_history.append(
-                (self.stats["steps"], self.cache.ranks,
-                 np.array([s.active for s in self.sched.slots])))
-            pools, tok, ob, lens = self._step(
+                (self.stats["steps"], self.cache.ranks, active_dec))
+            step_fn = self._step_mixed if mid else self._step
+            extra = (self.prompt_buf,) if mid else ()
+            pools, tok, ob, lens = step_fn(
                 self.params, self.cache.k_pool, self.cache.v_pool,
                 self.cache.kt_pool, self.cache.mass_pool,
                 self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
                 self.cache.basis, self._active_dev, self.out_buf,
-                self._plen_dev)
+                self._plen_dev, self._temp_dev, self._topk_dev,
+                self._seed_dev, *extra)
             self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
             self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
             self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
@@ -342,11 +518,25 @@ class ServeEngine:
             if self.time_per_token:
                 jax.block_until_ready(tok)
                 dt = time.perf_counter() - t0
-            need_tok = any(self.sched.slots[i].req.eos_id is not None
-                           for i in live)
+            emitting = decoding + finishing
+            need_tok = (self._stream_sync and emitting) or any(
+                self.sched.slots[i].req.eos_id is not None for i in emitting)
             tok_host = np.asarray(tok[:, 0]) if need_tok else None
+            now_t = time.perf_counter()
             for i in live:
                 st = self.sched.slots[i]
+                if i in q_host:                   # mid-prefill row
+                    q = q_host[i]
+                    st.prefilled += q
+                    self.cache.lens[i] += q       # host mirror of _lens_dev
+                    if st.prefilled == st.prompt_len:
+                        st.n_out = 1              # token 0 emitted this step
+                        st.latencies.append(now_t - st.admit_s)   # TTFT
+                        self.stats["prefills"] += 1
+                        self.request_first_tok_t[st.req.rid] = now_t
+                        if tok_host is not None:
+                            st.last_tok = int(tok_host[i])
+                    continue
                 st.decode_i += 1
                 st.n_out += 1
                 self.cache.lens[i] += 1           # host mirror of _lens_dev
@@ -354,10 +544,17 @@ class ServeEngine:
                     st.last_tok = int(tok_host[i])
                 if dt is not None:
                     st.latencies.append(dt)
+            if tok_host is not None:
+                self.last_emitted.extend(
+                    (self.sched.slots[i].req.rid,
+                     self.sched.slots[i].n_out - 1, int(tok_host[i]))
+                    for i in emitting)
             self.stats["steps"] += 1
-            self.stats["tokens_decoded"] += len(live)
-            if self._drift is not None:
-                self._check_drift(live)
+            self.stats["tokens_decoded"] += len(decoding)
+            if mid:
+                self.stats["mixed_steps"] += 1
+            if self._drift is not None and decoding:
+                self._check_drift(decoding)
             self._evict_finished()
         self.now += 1
 
@@ -384,8 +581,8 @@ class ServeEngine:
 
     def ranks_per_step(self) -> List[np.ndarray]:
         """Host copy of the per-step (ranks, active) record; -1 marks dead
-        lanes AND full-rank decode (rank mode 'off'), where the cache's
-        r_max placeholder is not a real bucket."""
+        lanes, mid-prefill lanes AND full-rank decode (rank mode 'off'),
+        where the cache's r_max placeholder is not a real bucket."""
         if self.cfg.rank.mode == "off":
             return [np.full(a.shape, -1) for _, _, a in self.rank_history]
         return [np.where(a, np.asarray(r), -1)

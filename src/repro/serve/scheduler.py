@@ -21,12 +21,21 @@ import numpy as np
 
 @dataclass
 class Request:
-    """One generation request. ``tokens`` is the prompt (1-D int array)."""
+    """One generation request. ``tokens`` is the prompt (1-D int array).
+
+    ``temperature``/``top_k``/``seed`` are the in-graph sampling knobs
+    (repro.serve.api.SamplingParams maps onto them): temperature 0 is
+    greedy argmax; top_k 0 samples the full vocabulary; the seed keys a
+    per-token PRNG fold so a stream's draw sequence is reproducible
+    regardless of engine batching."""
     rid: int
     tokens: np.ndarray
     max_new: int
     arrival: int = 0                 # engine step at which it may be admitted
     eos_id: Optional[int] = None
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -34,22 +43,38 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.arrival < 0:
+            raise ValueError(f"negative arrival step {self.arrival}")
+        if self.temperature < 0.0:
+            raise ValueError(f"negative temperature {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"negative top_k {self.top_k}")
 
 
 @dataclass
 class SlotState:
     req: Optional[Request] = None
     prompt_len: int = 0
+    prefilled: int = 0     # prompt tokens written so far (chunked prefill)
     decode_i: int = 0      # fused decode steps taken for this stream
     t: int = 0             # segment counter (annealed-threshold clock)
     n_out: int = 0         # tokens produced so far (prefill token included)
     last_tok: Optional[int] = None   # synced from device only when eos_id set
     # wall-clock per-token latencies (filled by the engine when timing)
     latencies: List[float] = field(default_factory=list)
+    admit_s: float = 0.0   # perf_counter at admission (TTFT reference)
 
     @property
     def active(self) -> bool:
         return self.req is not None
+
+    @property
+    def mid_prefill(self) -> bool:
+        """True while a chunked prompt is still being consumed. A slot in
+        this state owns its pages and its queue identity: it must never be
+        double-admitted (``active`` covers that) nor evicted early — it has
+        produced no token yet, so neither EOS nor max_new can apply."""
+        return self.req is not None and self.prefilled < self.prompt_len
 
 
 def prefill_buckets(max_prompt: int, floor: int = 8) -> Tuple[int, ...]:
@@ -111,6 +136,7 @@ class Scheduler:
             free.pop(0)
             st = self.slots[slot]
             st.req, st.prompt_len = req, len(req.tokens)
+            st.prefilled = 0
             st.decode_i, st.t = 0, 0
             st.n_out, st.last_tok = 0, None
             st.latencies = []
@@ -122,6 +148,11 @@ class Scheduler:
     def should_evict(self, slot: int) -> bool:
         st = self.slots[slot]
         if not st.active:
+            return False
+        if st.mid_prefill:
+            # a chunked prompt still in flight: no token exists yet, so
+            # EOS / max_new cannot have fired — and a stale ``last_tok``
+            # from a previous occupant must never evict the new stream
             return False
         if st.n_out >= st.req.max_new:
             return True

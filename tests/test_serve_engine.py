@@ -63,6 +63,7 @@ def test_scheduler_invariants(seed, n_slots, n_reqs):
             assert req.arrival <= now
             admitted_order.append(req.rid)
             cache.lens[slot] = len(req.tokens)
+            sched.slots[slot].prefilled = len(req.tokens)  # one-shot prefill
             sched.slots[slot].n_out = 1
         # invariant: one live request per slot, disjoint live pages
         live = [s.req.rid for s in sched.slots if s.active]
