@@ -28,6 +28,12 @@ the decode-stall seconds (wall time spent in monolithic prefills while
 other streams had decode work pending — identically zero for chunked
 admission) land in BENCH_serve.json.
 
+A fifth section drives a **shared-system-prompt workload** through the
+prefix cache (repro.serve.prefix) and its cache-off twin: prefix-hit vs
+cold token parity and the refcount invariant are asserted, and the
+section records hit rate, prefill tokens computed per request (>= 2x
+reduction asserted) and TTFT p50/p95 split hot vs cold.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
 from __future__ import annotations
@@ -150,6 +156,91 @@ def chunked_compare(cfg, params, workload, n_slots: int, max_len: int,
     }
 
 
+def prefix_compare(cfg, params, n_slots: int, max_len: int,
+                   smoke: bool = False):
+    """Shared-system-prompt traffic with the prefix cache on vs off.
+
+    Every request = one shared 32-token prefix + a unique 8-token tail,
+    arrivals spaced so the first prefill finishes (and inserts into the
+    radix tree) before the rest arrive. Token parity between the two
+    engines is asserted (prefix-hit admission must equal cold admission),
+    the refcount invariant is checked after the run, and the JSON section
+    records hit rate, prefill tokens computed per request (the >= 2x
+    reduction headline) and TTFT p50/p95 split hot (prefix hit) vs cold.
+    """
+    from repro.serve import Request, ServeEngine
+
+    rnd = np.random.default_rng(7)
+    n_req, shared_len, tail, max_new = (4 if smoke else 8), 32, 8, 8
+    shared = rnd.integers(0, 256, shared_len).astype(np.int32)
+    reqs = [dict(rid=i,
+                 tokens=np.concatenate(
+                     [shared, rnd.integers(0, 256, tail).astype(np.int32)]),
+                 max_new=max_new, arrival=6 * i)
+            for i in range(n_req)]
+
+    def drive(prefix):
+        # time_per_token blocks every fused step, so TTFT is a true wall
+        # (free-running dispatch would timestamp the enqueue, not the
+        # token)
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          page_size=16, segment_len=8, max_new_cap=max_new,
+                          prefill_chunk=16, prefix_cache=prefix,
+                          time_per_token=True)
+        # two passes: the first also compiles the admission-time control
+        # ops (snapshot slices, mass rehydration, CoW copies) that
+        # warmup() cannot reach; the second pass is the measurement —
+        # reset() clears the tree, so its hit pattern is identical
+        for rep in range(2):
+            if rep:
+                eng.reset()
+            for w in reqs:
+                eng.submit(Request(**w))
+            eng.warmup()
+            outs = eng.run()
+        s = eng.stats
+        # first_token_s and sched.finished append in the same eviction
+        # loop, so they zip rid-aligned
+        pairs = [(req.rid, t * 1e3) for (req, _), t
+                 in zip(eng.sched.finished, eng.first_token_s)]
+        hot = [t for rid, t in pairs if eng.request_prefix_hit.get(rid)]
+        cold = [t for rid, t in pairs if not eng.request_prefix_hit.get(rid)]
+        if prefix:
+            eng.cache.check_refs(eng.prefix.all_pages())
+        def pct(xs):
+            return (None if not xs else
+                    {"p50_ms": float(np.percentile(xs, 50)),
+                     "p95_ms": float(np.percentile(xs, 95))})
+        return outs, {
+            "hit_rate": s["prefix_hits"] / n_req if prefix else 0.0,
+            "reused_tokens": s["prefix_reused_tokens"],
+            "prefill_tokens_per_request": s["prefill_tokens"] / n_req,
+            "cow_pages": s["prefix_cow"],
+            "evicted_pages": s["prefix_evictions"],
+            "ttft_hot": pct(hot),
+            "ttft_cold": pct(cold),
+            "tok_per_s": s["tokens_decoded"] / max(s["decode_s"], 1e-9),
+        }
+
+    outs_on, on = drive(True)
+    outs_off, off = drive(False)
+    parity = all(np.array_equal(outs_on[w["rid"]], outs_off[w["rid"]])
+                 for w in reqs)
+    assert parity, "prefix-hit admission diverged from cold admission"
+    reduction = (off["prefill_tokens_per_request"]
+                 / max(on["prefill_tokens_per_request"], 1e-9))
+    assert reduction >= 2.0, \
+        f"prefill-token reduction {reduction:.2f}x below the 2x bar"
+    return {
+        "parity": parity,
+        "workload": {"n_requests": n_req, "shared_len": shared_len,
+                     "tail_len": tail},
+        "cached": on,
+        "baseline": off,
+        "prefill_token_reduction": reduction,
+    }
+
+
 def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         out_path: str = "BENCH_serve.json"):
     import jax
@@ -264,6 +355,10 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
     chunk_res = chunked_compare(cfg, params, workload,
                                 n_slots=min(n_slots, 4), max_len=max_len)
 
+    # -- shared-prefix KV reuse: hit rate, prefill cut, hot/cold TTFT ---
+    prefix_res = prefix_compare(cfg, params, n_slots=min(n_slots, 4),
+                                max_len=max_len, smoke=smoke)
+
     out = {
         "workload": {"n_requests": n_requests, "max_new": max_new,
                      "prompt_lens": [len(w["tokens"]) for w in workload],
@@ -273,6 +368,7 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "speedup": engine_res["tok_per_s"] / max(seq_res["tok_per_s"], 1e-9),
         "factor_cache": factor_res,
         "chunked_prefill": chunk_res,
+        "prefix_cache": prefix_res,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     with open(out_path, "w") as f:
@@ -310,6 +406,15 @@ def main():
           f"vs {cb['ttft_p50_ms']:.1f}/{cb['ttft_p95_ms']:.1f} ms blocking; "
           f"decode stall {ci['decode_stall_s']:.2f}s vs "
           f"{cb['decode_stall_s']:.2f}s")
+    px = res["prefix_cache"]
+    hot = px["cached"]["ttft_hot"] or {"p50_ms": float("nan")}
+    cold = px["baseline"]["ttft_cold"]
+    print(f"prefix     : parity {px['parity']}  hit rate "
+          f"{px['cached']['hit_rate']:.2f}  prefill tok/req "
+          f"{px['cached']['prefill_tokens_per_request']:.1f} vs "
+          f"{px['baseline']['prefill_tokens_per_request']:.1f} "
+          f"({px['prefill_token_reduction']:.1f}x cut); TTFT p50 "
+          f"{hot['p50_ms']:.1f} ms hot vs {cold['p50_ms']:.1f} ms cold")
     if res["speedup"] <= 1.0 and not args.smoke:
         # --smoke is a does-it-run canary: 4 under-saturated requests,
         # single repeat — not a throughput measurement

@@ -333,23 +333,31 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     exact zeros. No spectral solve happens here: the basis is refreshed by
     the segment decision (Eq. 12).
 
-    ``kt_pool`` (L, P, page_size, hkv, r_max), when given, is the paged K
-    cache in factor form kt = K . B_r under each slot's segment basis: the
-    score contraction then reads the factor pages (r_max/d of the dense K
-    bytes) instead of gathering + projecting dense K. New tokens' factors
-    are appended in-graph; dense K is still written (basis refresh /
-    drift need it) but not read there. A mid-prefill row's appended
-    factors are placeholders — its first segment decision re-projects the
-    whole slot before any factor read.
+    ``kt_pool`` (L, n_slots + 1, M, hkv, r_max), when given, is the K
+    cache in factor form kt = K . B_r under each slot's segment basis:
+    the score contraction then reads the factors (r_max/d of the dense K
+    bytes) instead of gathering + projecting dense K. Unlike K/V the
+    factors are **slot-indexed**, not paged: they depend on the slot's
+    own basis, so two slots sharing a physical prefix page (serve/prefix)
+    hold different factors of the same keys. Row n_slots is a scratch row
+    absorbing dead-lane / padding-column writes. New tokens' factors are
+    appended in-graph; dense K is still written (basis refresh / drift
+    need it) but not read there. A mid-prefill row's appended factors are
+    placeholders — its first segment decision re-projects the whole slot
+    before any factor read.
 
-    ``mass_pool`` (L, P, page_size, hkv), when given, accumulates each
+    ``mass_pool`` (L, n_slots, M, hkv), when given, accumulates each
     key's received softmax mass in-graph (group-mean over the q heads of
     each kv head): the weighted-Gram input of the next segment decision.
-    A prefill chunk's queries scatter their causal mass over the full
-    prefix — chunk-by-chunk accumulation reproduces the one-shot prompt
-    seed, so the weighted basis still sees the whole prompt's mass. Newly
-    written cells are reset before the scatter-add, so recycled pages
-    never leak a previous occupant's mass into a live stream.
+    Also slot-indexed: mass is per-*stream* state (which queries
+    attended), so a shared prefix page receives different mass from each
+    sharing slot. A prefill chunk's queries add their causal mass over
+    the full prefix — chunk-by-chunk accumulation reproduces the one-shot
+    prompt seed, so the weighted basis still sees the whole prompt's
+    mass. A cell is reset in-graph the step its position is appended
+    (before the add), so recycled slots never leak a previous occupant's
+    mass; a prefix-hit slot's matched region is instead re-seeded from
+    the tree snapshot at admission and only ever added to here.
 
     Returns (logits (n_slots, 1, V), pools) with pools a dict holding the
     updated ``k``/``v`` pools plus ``kt``/``mass`` when those were given.
@@ -397,6 +405,15 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     kv_len_q = (slot_lens[:, None]
                 + jnp.minimum(j_idx, q_lens[:, None] - 1) + 1)  # (ns, C)
     valid = jnp.arange(M)[None, :] < kv_end[:, None]            # (ns, M)
+    # slot-indexed write coordinates for the per-slot kt rows: padding
+    # columns / dead lanes land on scratch row ns instead of a phys page
+    slot_rows = jnp.where(write_ok, jnp.arange(ns)[:, None], ns)
+    slot_pos = jnp.where(write_ok, jnp.minimum(positions, M - 1), 0)
+    # a position's mass cell is reset exactly once — in the step that
+    # appends it — so recycled slots never leak a previous occupant's
+    # mass and admission needs no eager pool-wide zeroing
+    new_cell = (valid & (jnp.arange(M)[None, :] >= slot_lens[:, None])
+                & active[:, None])
     score_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
         cfg.softmax_dtype]
     scale = dh ** -0.5
@@ -441,11 +458,12 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                       * col_ok[:, None, None, :]).astype(x.dtype)
             if ktp is not None:
                 # factor-form cache: append the new tokens' factors and
-                # read the paged factors — r/d of the dense K bytes
+                # read the slot-indexed factors — r/d of the dense K bytes
                 kt_new = jnp.einsum("bshd,bhdr->bshr",
                                     k.astype(jnp.float32), basis_l)
-                ktp = ktp.at[phys, off].set(kt_new.astype(ktp.dtype))
-                ktg = ktp[page_table].reshape(ns, M, hkv, r_keep)
+                ktp = ktp.at[slot_rows, slot_pos].set(
+                    kt_new.astype(ktp.dtype))
+                ktg = ktp[:ns]                        # (ns, M, hkv, r)
                 k_fac = (ktg * valid[:, :, None, None].astype(ktg.dtype)
                          ).astype(x.dtype)
             else:
@@ -497,16 +515,18 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                 o = res
         if mp is not None:
             # per-key attention mass: group-mean over each kv head's q
-            # heads, masked to live lanes and valid queries. Reset the
-            # appended tokens' cells first — a recycled page must not seed
-            # a new key with a previous occupant's mass.
+            # heads, masked to live lanes and valid queries (dead lanes /
+            # padding columns contribute exact zeros, so the slot-indexed
+            # accumulate is a plain add — no scatter, no scratch row).
+            # Cells appended this step are reset before the add, so a
+            # recycled slot's stale mass dies the moment the position is
+            # reused — no eager pool-wide zeroing at admission.
             from repro.models.common import kv_group_mean
-            mp = mp.at[phys, off].set(jnp.zeros((ns, C, hkv), mp.dtype))
             w = (probs.astype(jnp.float32)
                  * write_ok[:, None, :, None]).sum(axis=2)   # (ns, hq, M)
-            w_tok = kv_group_mean(w, hkv)
-            w_sc = jnp.swapaxes(w_tok, 1, 2).reshape(ns, n_pp, ps, hkv)
-            mp = mp.at[page_table].add(w_sc.astype(mp.dtype))
+            w_tok = kv_group_mean(w, hkv)                    # (ns, hkv, M)
+            mp = (jnp.where(new_cell[:, :, None], 0.0, mp)
+                  + jnp.swapaxes(w_tok, 1, 2).astype(mp.dtype))
         x = x + jnp.einsum("bshf,hfd->bsd", o,
                            p["wo"].reshape(hq, dh, d).astype(x.dtype))
         if cfg.family == "moe" and cfg.moe is not None and "moe" in lp:

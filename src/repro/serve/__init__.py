@@ -10,6 +10,10 @@
 - policy:    slot-indexed segment-level rank decision + eigenbasis refresh
              (ported from the old AdaptiveServer._decide_rank, no host
              syncs).
+- prefix:    shared-prefix KV reuse — a token-level radix tree over
+             page-granularity prefixes with refcounted page sharing,
+             exact attention-mass snapshots, LRU eviction and
+             copy-on-write of partially-filled shared tail pages.
 - engine:    the step loop core — one fused decode executable over all
              live slots with per-row kv_len, per-row rank, and chunked
              prefill interleaved into the same step.
@@ -18,8 +22,9 @@ from repro.serve.api import (Engine, EngineConfig, RequestHandle,
                              SamplingParams, make_engine)
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_cache import PagedKVCache
+from repro.serve.prefix import PrefixCache, RadixNode
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "EngineConfig", "RequestHandle", "SamplingParams",
-           "make_engine", "ServeEngine", "PagedKVCache", "Request",
-           "Scheduler"]
+           "make_engine", "ServeEngine", "PagedKVCache", "PrefixCache",
+           "RadixNode", "Request", "Scheduler"]

@@ -30,6 +30,7 @@ for servers that multiplex many handles.
 """
 from __future__ import annotations
 
+import threading
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -47,11 +48,17 @@ class SamplingParams:
     """Per-request generation knobs.
 
     ``temperature == 0`` (the default) is greedy argmax; ``top_k == 0``
-    samples the full vocabulary. ``seed`` keys a per-token PRNG fold —
-    a stream's draw sequence is a pure function of (seed, token index),
-    reproducible under any batching/admission interleaving."""
+    samples the full vocabulary; ``top_p == 1`` disables the nucleus cut
+    (``top_p < 1`` keeps the smallest probability-sorted set whose mass
+    reaches ``top_p`` — composable with ``top_k``, applied after it, and
+    requires an engine built with ``EngineConfig(nucleus=True)``).
+    ``seed`` keys a per-token PRNG fold — a stream's draw sequence is a
+    pure function of (seed, token index), reproducible under any
+    batching/admission interleaving. Greedy, top-k and top-p streams all
+    share ONE fused-step executable."""
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     seed: int = 0
     max_new: int = 64
     eos_id: Optional[int] = None
@@ -61,6 +68,8 @@ class SamplingParams:
             raise ValueError(f"negative temperature {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"negative top_k {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {self.max_new}")
 
@@ -73,7 +82,18 @@ class EngineConfig:
     stream is mid-prefill (chunked prefill interleaved into decode);
     ``None`` = legacy blocking length-bucketed prefill at admission.
     ``sampling=False`` compiles the lean greedy-only step (requests with
-    temperature/top_k then fail fast at submit)."""
+    temperature/top_k/top_p then fail fast at submit); ``nucleus=True``
+    additionally compiles the top-p cut — a full-vocab softmax + sort in
+    every fused step, so leave it off unless streams use ``top_p < 1``
+    (such requests fail fast on a nucleus=False engine).
+    ``prefix_cache=True`` turns on shared-prefix KV reuse
+    (``repro.serve.prefix``): finished prompts stay cached in a radix
+    tree, and a request whose prompt starts with a cached prefix shares
+    those pages and prefills only from the divergence point — token
+    parity with cold admission is preserved. Requires chunked prefill;
+    run ``prefill_chunk`` as a multiple of ``page_size`` for a reuse
+    point at every page. ``prefix_pages`` sizes the extra pool headroom
+    kept for cached prefixes (default: one extra slot-set of pages)."""
     n_slots: int = 4
     max_len: int = 256
     page_size: int = 16
@@ -83,8 +103,11 @@ class EngineConfig:
     use_kernel: bool = False
     drift_threshold: Optional[float] = None
     factor_cache: Optional[bool] = None
+    prefix_cache: bool = False
+    prefix_pages: Optional[int] = None
     time_per_token: bool = False
     sampling: bool = True
+    nucleus: bool = False
     top_k_cap: int = 64
     buckets: Optional[Sequence[int]] = None
 
@@ -94,6 +117,9 @@ class EngineConfig:
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
         if self.max_len < 1 or self.n_slots < 1 or self.page_size < 1:
             raise ValueError("n_slots/max_len/page_size must be >= 1")
+        if self.prefix_cache and self.prefill_chunk is None:
+            raise ValueError("prefix_cache requires chunked prefill "
+                             "(set prefill_chunk)")
 
 
 @dataclass
@@ -178,11 +204,23 @@ class Engine:
             drift_threshold=c.drift_threshold,
             time_per_token=c.time_per_token, factor_cache=c.factor_cache,
             prefill_chunk=c.prefill_chunk, sampling=c.sampling,
-            top_k_cap=c.top_k_cap)
+            nucleus=c.nucleus, top_k_cap=c.top_k_cap,
+            prefix_cache=c.prefix_cache, prefix_pages=c.prefix_pages)
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._finished_seen = 0
         self._streaming: set = set()     # rids with an attached consumer
+        # submit() may run on a non-loop thread: rid assignment, handle
+        # registration and the core queue append form one critical section
+        self._submit_lock = threading.Lock()
+        # handles drive step() from whatever thread calls result()/
+        # tokens(): whole engine iterations are serialised so concurrent
+        # consumers interleave steps instead of racing the core state.
+        # Reentrant: an on_token callback fires under this lock and may
+        # itself drive the engine (handle.result() on a follow-up
+        # request), which recurses on the same thread instead of
+        # deadlocking.
+        self._step_lock = threading.RLock()
 
     # -- request plane ---------------------------------------------------
 
@@ -194,22 +232,30 @@ class Engine:
         request that could never be served (prompt + max_new beyond a
         slot's capacity, max_new beyond the engine cap, negative arrival,
         top_k beyond the compiled cap, sampling on a greedy-only engine)
-        raises here instead of queueing forever."""
+        raises here instead of queueing forever.
+
+        Thread-safe: may be called from a thread other than the one
+        driving step()/run() — submission is serialised against both
+        concurrent submits and the step loop's admission."""
         params = params or SamplingParams()
-        rid = self._next_rid
-        req = Request(rid=rid, tokens=np.asarray(prompt, np.int32),
-                      max_new=params.max_new, arrival=arrival,
-                      eos_id=params.eos_id, temperature=params.temperature,
-                      top_k=params.top_k, seed=params.seed)
-        self.core.submit(req)                 # may raise — rid not consumed
-        self._next_rid += 1
-        h = RequestHandle(rid=rid, prompt_len=len(req.tokens), params=params,
-                          _engine=self, _submit_s=time.perf_counter(),
-                          on_token=on_token)
-        self._handles[rid] = h
-        if on_token is not None:
-            self._streaming.add(rid)
-            self.core._stream_sync = True
+        with self._submit_lock:
+            rid = self._next_rid
+            req = Request(rid=rid, tokens=np.asarray(prompt, np.int32),
+                          max_new=params.max_new, arrival=arrival,
+                          eos_id=params.eos_id,
+                          temperature=params.temperature,
+                          top_k=params.top_k, top_p=params.top_p,
+                          seed=params.seed)
+            self.core.submit(req)             # may raise — rid not consumed
+            self._next_rid += 1
+            h = RequestHandle(rid=rid, prompt_len=len(req.tokens),
+                              params=params, _engine=self,
+                              _submit_s=time.perf_counter(),
+                              on_token=on_token)
+            self._handles[rid] = h
+            if on_token is not None:
+                self._streaming.add(rid)
+                self.core._stream_sync = True
         return h
 
     def _ensure_streaming(self, handle: RequestHandle) -> None:
@@ -249,31 +295,34 @@ class Engine:
         Every step accrues its wall time (minus any in-loop prefill) into
         ``stats['decode_s']``, so throughput stays honest no matter what
         drives the loop — ``run()``, a ``RequestHandle`` iterator, or an
-        external server loop."""
-        stats = self.core.stats
-        p0 = stats["prefill_s"]
-        t0 = time.perf_counter()
-        self.core.step()
-        stats["decode_s"] += max(
-            time.perf_counter() - t0 - (stats["prefill_s"] - p0), 0.0)
-        for rid, idx, tok in self.core.last_emitted:
-            h = self._handles.get(rid)
-            if h is not None:
-                if idx > len(h._toks):
-                    self._backfill(h)     # close the gap before delivering
-                h._feed(idx, tok)
-        finished = self.core.sched.finished
-        for req, out in finished[self._finished_seen:]:
-            h = self._handles.get(req.rid)
-            if h is not None and not h.done:
-                h._finish(np.asarray(out, np.int32),
-                          self.core.request_first_tok_t.get(req.rid))
-            self._streaming.discard(req.rid)
-        self._finished_seen = len(finished)
-        if not self._streaming:
-            # last streaming consumer done: restore the sync-free loop
-            self.core._stream_sync = False
-        return not self.core.sched.done()
+        external server loop. Thread-safe: handles on different threads
+        (each blocking in ``result()``/``tokens()``) interleave whole
+        iterations under one lock instead of racing the core state."""
+        with self._step_lock:
+            stats = self.core.stats
+            p0 = stats["prefill_s"]
+            t0 = time.perf_counter()
+            self.core.step()
+            stats["decode_s"] += max(
+                time.perf_counter() - t0 - (stats["prefill_s"] - p0), 0.0)
+            for rid, idx, tok in self.core.last_emitted:
+                h = self._handles.get(rid)
+                if h is not None:
+                    if idx > len(h._toks):
+                        self._backfill(h)  # close the gap before delivering
+                    h._feed(idx, tok)
+            finished = self.core.sched.finished
+            for req, out in finished[self._finished_seen:]:
+                h = self._handles.get(req.rid)
+                if h is not None and not h.done:
+                    h._finish(np.asarray(out, np.int32),
+                              self.core.request_first_tok_t.get(req.rid))
+                self._streaming.discard(req.rid)
+            self._finished_seen = len(finished)
+            if not self._streaming:
+                # last streaming consumer done: restore the sync-free loop
+                self.core._stream_sync = False
+            return not self.core.sched.done()
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Drive the loop until every submitted request finished."""
@@ -287,15 +336,20 @@ class Engine:
         t0 = time.perf_counter()
         jax.block_until_ready(self.core.out_buf)
         self.core.stats["decode_s"] += time.perf_counter() - t0
-        return {rid: h._result for rid, h in self._handles.items()
-                if h.done}
+        # snapshot under the submit lock: another thread may be inserting
+        # handles while this one drains
+        with self._submit_lock:
+            handles = list(self._handles.items())
+        return {rid: h._result for rid, h in handles if h.done}
 
     def reset(self) -> None:
-        """Drop all requests/handles but keep the compiled executables."""
-        self.core.reset()
-        self._handles.clear()
-        self._finished_seen = 0
-        self._streaming.clear()
+        """Drop all requests/handles but keep the compiled executables.
+        Serialised against concurrent step()/submit() callers."""
+        with self._step_lock, self._submit_lock:
+            self.core.reset()
+            self._handles.clear()
+            self._finished_seen = 0
+            self._streaming.clear()
 
     # -- introspection ---------------------------------------------------
 
@@ -306,7 +360,9 @@ class Engine:
     def ttft(self) -> Dict[int, float]:
         """Per-request submit()->first-token wall seconds (finished or
         streaming requests only)."""
-        return {rid: h.ttft_s for rid, h in self._handles.items()
+        with self._submit_lock:
+            handles = list(self._handles.items())
+        return {rid: h.ttft_s for rid, h in handles
                 if h.ttft_s is not None}
 
 

@@ -26,12 +26,20 @@ compiled executables:
         length-bucketed full-rank prefill forward (one compile per
         bucket) runs at admission, blocking the loop while it prefills.
 
+With ``prefix_cache=True`` (chunked mode only) finished prompts stay
+cached in a radix tree (serve.prefix): admission matches the new prompt
+against it, shares the hit's pages (refcounted, copy-on-write for a
+partial tail page), rehydrates the slot's attention-mass row from the
+prefix snapshot, and enters chunked prefill at the reuse point — token
+output is identical to a cold admission that prefilled the whole prompt.
+
 The step loop is host-side control only; lengths / ranks / tokens stay on
 device between steps (token values are synced per step only when a live
 request carries an ``eos_id`` or a streaming consumer is attached).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -43,6 +51,7 @@ from repro.configs.base import ModelConfig
 from repro.models.api import get_model
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.policy import basis_drift, make_decide_fn
+from repro.serve.prefix import MatchResult, PrefixCache
 from repro.serve.scheduler import (Request, Scheduler, bucket_for,
                                    prefill_buckets)
 
@@ -59,7 +68,10 @@ class ServeEngine:
                  time_per_token: bool = False,
                  factor_cache: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
-                 sampling: bool = False, top_k_cap: int = 64):
+                 sampling: bool = False, nucleus: bool = False,
+                 top_k_cap: int = 64,
+                 prefix_cache: bool = False,
+                 prefix_pages: Optional[int] = None):
         self.cfg, self.params, self.policy = cfg, params, policy_params
         self.seg = int(segment_len or cfg.rank.segment_len)
         self.n_slots = n_slots
@@ -70,19 +82,41 @@ class ServeEngine:
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.chunk = prefill_chunk
+        if prefix_cache and prefill_chunk is None:
+            # exact mass snapshots are captured where chunked prefill
+            # pauses; the one-shot path has no such cut points
+            raise ValueError("prefix_cache requires chunked prefill "
+                             "(prefill_chunk is None)")
         # sampling=True compiles the temperature/top-k/gumbel tail into the
         # fused step (static flag: greedy-only engines keep the plain
         # argmax executable). Greedy rows (temperature 0) stay bitwise
-        # identical either way.
+        # identical either way. nucleus=True additionally compiles the
+        # top-p cut — a full-vocab softmax + sort per step, so engines
+        # that never serve top_p < 1 should leave it off.
         self.sampling = sampling
+        self.nucleus = bool(nucleus)
+        if self.nucleus and not sampling:
+            raise ValueError("nucleus (top-p) requires sampling=True")
         self.top_k_cap = int(top_k_cap)
         # factor_cache=None -> factor form whenever the rank path is on
         # AND the widest bucket is below the head dim (otherwise the
         # factor pool saves nothing). True forces it on (error without a
         # rank mode — there is no basis to factor against), False forces
         # the dense-K read; the benchmark uses both for the comparison.
+        # prefix_cache grows the pool by ``prefix_pages`` (default: one
+        # extra slot-set) so cached prefixes don't starve admissions.
+        pps = -(-max_len // page_size)
+        self._n_pages = None
+        if prefix_cache:
+            extra = n_slots * pps if prefix_pages is None else prefix_pages
+            self._n_pages = n_slots * pps + 1 + extra
         self.cache = PagedKVCache(cfg, n_slots, max_len, page_size,
+                                  n_pages=self._n_pages,
                                   factored=factor_cache)
+        self.prefix = PrefixCache(self.cache) if prefix_cache else None
+        # submit() and admission (scheduler pop + device staging) may run
+        # on different threads; one lock covers both critical sections
+        self._lock = threading.Lock()
         self._buckets = tuple(buckets) if buckets else prefill_buckets(max_len)
         self.sched = Scheduler(n_slots, self._buckets)
         self.fns = get_model(cfg)
@@ -107,9 +141,9 @@ class ServeEngine:
         # sampling math the fused step applies, on the prefill's last
         # prompt logits — a sampled stream draws identically whether its
         # token 0 comes from a bucketed prefill or a finishing chunk
-        self._select1 = jax.jit(lambda lg, t, k, sd: self._select_token(
+        self._select1 = jax.jit(lambda lg, t, k, p, sd: self._select_token(
             lg[None], jnp.zeros((1,), jnp.int32), t[None], k[None],
-            sd[None])[0])
+            p[None], sd[None])[0])
         self._drift = (jax.jit(basis_drift)
                        if drift_threshold is not None else None)
         self._reset_state()
@@ -133,13 +167,26 @@ class ServeEngine:
         # the control sync on admission)
         self._temp = np.zeros((ns,), np.float32)
         self._topk = np.zeros((ns,), np.int32)
+        self._topp = np.ones((ns,), np.float32)
         self._seed = np.zeros((ns,), np.uint32)
-        self._temp_dev = self._topk_dev = self._seed_dev = None
+        self._temp_dev = self._topk_dev = self._topp_dev = None
+        self._seed_dev = None
         self.prompt_buf = (jnp.zeros((ns, self.cache.max_len), jnp.int32)
                            if self.chunk is not None else None)
+        # prefix-cache bookkeeping: the hit looked up at allocation time
+        # (applied when the placement lands), the per-slot exact mass
+        # snapshots captured during chunked prefill, and the inserted
+        # nodes awaiting their lazy layer-0 spectra capture
+        self._hits: Dict[int, MatchResult] = {}
+        self._snaps: Dict[int, Dict[int, Optional[jnp.ndarray]]] = {}
+        self._spectra_pending: Dict[int, object] = {}
+        self.request_prefix_hit: Dict[int, bool] = {}
         self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
                       "steps": 0, "tokens_decoded": 0, "prefills": 0,
-                      "decides": 0, "mixed_steps": 0, "stall_s": 0.0}
+                      "decides": 0, "mixed_steps": 0, "stall_s": 0.0,
+                      "prefill_tokens": 0, "prefix_hits": 0,
+                      "prefix_misses": 0, "prefix_reused_tokens": 0,
+                      "prefix_cow": 0, "prefix_evictions": 0}
         self.rank_history: List[Tuple[int, jnp.ndarray, np.ndarray]] = []
         # harvested at eviction: decode-step wall time per token (needs
         # time_per_token=True) and first-token (prefill) latency per request
@@ -158,16 +205,28 @@ class ServeEngine:
         self._stream_sync = False
 
     def reset(self):
-        """Clear all serving state but keep the compiled executables."""
-        cfg, c = self.cfg, self.cache
-        self.cache = PagedKVCache(cfg, self.n_slots, c.max_len, c.page_size,
-                                  n_pages=c.n_pages, factored=c.factored)
-        self.sched = Scheduler(self.n_slots, self._buckets)
-        self._reset_state()
+        """Clear all serving state — including every cached prefix — but
+        keep the compiled executables. Takes the engine lock: a submit
+        racing a reset either lands before (and is discarded with the old
+        scheduler's queue) or after (and is served) — never silently
+        orphaned in a swapped-out scheduler."""
+        with self._lock:
+            cfg, c = self.cfg, self.cache
+            self.cache = PagedKVCache(cfg, self.n_slots, c.max_len,
+                                      c.page_size, n_pages=c.n_pages,
+                                      factored=c.factored)
+            if self.prefix is not None:
+                self.prefix = PrefixCache(self.cache)
+            self.sched = Scheduler(self.n_slots, self._buckets)
+            self._reset_state()
 
     # -- request plane ---------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Enqueue a request. Thread-safe: the queue append is serialised
+        against the step loop's admission (scheduler pop + device staging)
+        by the engine lock, so a server thread may submit while another
+        drives step()/run() — the stepping stone to a fully async API."""
         if req.max_new > self.max_new_cap:
             raise ValueError(f"max_new {req.max_new} > engine cap "
                              f"{self.max_new_cap}")
@@ -176,13 +235,20 @@ class ServeEngine:
             raise ValueError(
                 f"request needs {len(req.tokens) + req.max_new} cache "
                 f"positions but a slot holds only {self.cache.max_len}")
-        if (req.temperature > 0 or req.top_k > 0) and not self.sampling:
+        if ((req.temperature > 0 or req.top_k > 0 or req.top_p < 1.0)
+                and not self.sampling):
             raise ValueError("request asks for sampling but the engine was "
                              "built with sampling=False (greedy executable)")
+        if req.top_p < 1.0 and not self.nucleus:
+            raise ValueError("request asks for top_p but the engine was "
+                             "built with nucleus=False (the top-p cut is "
+                             "a compiled-in full-vocab sort per step; "
+                             "build the engine with nucleus=True)")
         if req.top_k > self.top_k_cap:
             raise ValueError(f"top_k {req.top_k} > engine top_k_cap "
                              f"{self.top_k_cap}")
-        self.sched.submit(req)
+        with self._lock:
+            self.sched.submit(req)
 
     def warmup(self) -> float:
         """Compile (and run once, results discarded) every executable the
@@ -223,7 +289,7 @@ class ServeEngine:
                 self.cache.ranks, self.cache.basis,
                 jnp.zeros((ns,), bool), self.out_buf,
                 self._plen_dev, self._temp_dev, self._topk_dev,
-                self._seed_dev, *extra)
+                self._topp_dev, self._seed_dev, *extra)
             self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
             self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
             self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
@@ -249,13 +315,22 @@ class ServeEngine:
         mass = aux["layers"]["mass"] if self.cache.rank_on else None
         return logits, qkv["k"], qkv["v"], mass
 
-    def _select_token(self, logits, out_pos, temps, topks, seeds):
+    def _select_token(self, logits, out_pos, temps, topks, topps, seeds):
         """Next token per row from (ns, V) logits. ``out_pos`` is each
         row's output index (0 = first generated token): the sampling PRNG
         folds (per-request seed, out_pos), so a stream's draw sequence is
         a pure function of the request — identical under any batching,
         admission mode, or chunking. Greedy rows (temperature 0) take the
-        plain argmax, bitwise identical to the sampling-free executable."""
+        plain argmax, bitwise identical to the sampling-free executable.
+
+        Filter order matches the common stack: temperature scale -> top-k
+        -> top-p (nucleus: the smallest probability-sorted set whose mass
+        reaches ``top_p``; at least one token survives; probability ties
+        at the cut all stay in). ``top_p == 1`` rows bypass the nucleus
+        mask bitwise, so greedy / top-k / top-p streams mix in ONE
+        executable — but the cut itself (full-vocab softmax + sort per
+        step) is only compiled in when the engine was built with
+        ``nucleus=True``."""
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if not self.sampling:
             return greedy
@@ -266,16 +341,29 @@ class ServeEngine:
         thr = jnp.take_along_axis(kth, sel[:, None], 1)
         masked = jnp.where((topks[:, None] > 0) & (logits < thr),
                            -jnp.inf, logits)
+        t = jnp.maximum(temps, 1e-6)[:, None]
+        scaled = masked / t
+        if self.nucleus:
+            # nucleus cut: keep tokens whose probability is >= the
+            # smallest probability still inside the top_p mass
+            # (sorted-cumsum rule)
+            pr = jax.nn.softmax(scaled, axis=-1)
+            srt = jnp.sort(pr, axis=-1)[:, ::-1]
+            cum = jnp.cumsum(srt, axis=-1)
+            keep = (cum - srt) < topps[:, None]   # mass before token < p
+            p_min = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                            keepdims=True)
+            scaled = jnp.where((topps[:, None] < 1.0) & (pr < p_min),
+                               -jnp.inf, scaled)
         keys = jax.vmap(lambda s, p: jax.random.fold_in(
             jax.random.PRNGKey(s), p))(seeds, out_pos.astype(jnp.uint32))
         g = jax.vmap(lambda k: jax.random.gumbel(k, (V,)))(keys)
-        t = jnp.maximum(temps, 1e-6)[:, None]
-        sampled = jnp.argmax(masked / t + g, axis=-1).astype(jnp.int32)
+        sampled = jnp.argmax(scaled + g, axis=-1).astype(jnp.int32)
         return jnp.where(temps > 0, sampled, greedy)
 
     def _step_impl(self, params, pool_k, pool_v, kt_pool, mass_pool,
                    page_table, tokens, lens, ranks, basis, active, out_buf,
-                   prompt_lens, temps, topks, seeds):
+                   prompt_lens, temps, topks, topps, seeds):
         ns = tokens.shape[0]
         off = self.cfg.rank.mode == "off"
         logits, pools = self.fns.decode_step_paged(
@@ -288,7 +376,7 @@ class ServeEngine:
         out_idx = jnp.where(active, jnp.minimum(lens - prompt_lens + 1,
                                                 self.max_new_cap - 1), 0)
         tok = self._select_token(logits[:, 0], out_idx,
-                                 temps, topks, seeds)[:, None]
+                                 temps, topks, topps, seeds)[:, None]
         tok = jnp.where(active[:, None], tok, tokens)
         row = jnp.where(active, jnp.arange(ns), ns)       # dead -> scratch row
         out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
@@ -297,7 +385,7 @@ class ServeEngine:
 
     def _step_mixed_impl(self, params, pool_k, pool_v, kt_pool, mass_pool,
                          page_table, tokens, lens, ranks, basis, active,
-                         out_buf, prompt_lens, temps, topks, seeds,
+                         out_buf, prompt_lens, temps, topks, topps, seeds,
                          prompt_buf):
         """One mixed fused step: live decode rows advance one token while
         mid-prefill rows consume the next ``chunk`` tokens of their prompt
@@ -327,7 +415,7 @@ class ServeEngine:
         out_idx = jnp.where(emit, jnp.clip(lens_after - prompt_lens, 0,
                                            self.max_new_cap - 1), 0)
         tok = self._select_token(logits[:, 0], out_idx,
-                                 temps, topks, seeds)[:, None]
+                                 temps, topks, topps, seeds)[:, None]
         tok = jnp.where(emit[:, None], tok, tokens)
         row = jnp.where(emit, jnp.arange(ns), ns)         # no-emit -> scratch
         out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
@@ -347,11 +435,82 @@ class ServeEngine:
         self._lens_dev = jnp.asarray(self.cache.lens, jnp.int32)
         self._temp_dev = jnp.asarray(self._temp)
         self._topk_dev = jnp.asarray(self._topk)
+        self._topp_dev = jnp.asarray(self._topp)
         self._seed_dev = jnp.asarray(self._seed)
         self._dirty = False
 
+    def _can_allocate(self, slot: int, total_len: int) -> bool:
+        """Page-reservation hook for the scheduler, called for the head of
+        the pending queue. With a prefix cache, the head request's prompt
+        is matched first: a hit's shared pages become the slot's leading
+        page-table entries (ref + 1, no prefill over them), under pool
+        pressure the tree evicts LRU leaves (the matched path is pinned),
+        and the hit is stashed for the placement that follows."""
+        if self.prefix is None:
+            return self.cache.allocate(slot, total_len)
+        req = self.sched.pending[0]
+        hit = self.prefix.match(req.tokens)
+        # a partially-filled shared tail page is copied, not shared: the
+        # slot appends into it from the reuse point (copy-on-write), so
+        # allocation must draw its replacement from the free list
+        shared = hit.pages[:-1] if hit.cow_src is not None else hit.pages
+        shortfall = (self.cache.pages_needed(total_len) - len(shared)
+                     - self.cache.free_pages)
+        if shortfall > 0:
+            # stats count PAGES evicted from the tree (evict_lru's return)
+            self.stats["prefix_evictions"] += self.prefix.evict_lru(
+                shortfall, protect=hit.nodes)
+        if not self.cache.allocate(slot, total_len, prefix_pages=shared):
+            return False
+        # LRU recency advances only for a committed HIT — neither a head
+        # request re-matching every step while blocked on pages, nor a
+        # miss that merely grazed the path, may inflate it
+        if hit.reuse_len > 0:
+            self.prefix.touch_path(hit.nodes)
+        self._hits[slot] = hit
+        return True
+
+    def _apply_prefix_hit(self, slot: int, req: Request) -> int:
+        """Rehydrate a prefix hit at admission: COW the shared tail page if
+        partial, mark the matched tokens prefilled, and re-seed the slot's
+        per-stream low-rank state (mass row, spectra) from the snapshot so
+        the first segment decision is identical to a cold admission's.
+        Returns the number of reused prompt tokens."""
+        hit = self._hits.pop(slot, None)
+        st = self.sched.slots[slot]
+        m = 0 if hit is None else hit.reuse_len
+        if hit is not None:
+            self.request_prefix_hit[req.rid] = m > 0
+            self.stats["prefix_hits" if m > 0 else "prefix_misses"] += 1
+            self.stats["prefix_reused_tokens"] += m
+        if m > 0:
+            if hit.cow_src is not None:
+                dst = int(self.cache.page_table[slot,
+                                                m // self.cache.page_size])
+                self.cache.copy_page(dst, hit.cow_src)
+                self.stats["prefix_cow"] += 1
+            st.prefilled = m
+            self.cache.lens[slot] = m
+            if hit.spectra is not None and self.cache.spectra is not None:
+                # informational warm start; the first decision overwrites
+                # it (veto disabled via has_rank), so parity is untouched
+                self.cache.spectra = self.cache.spectra.at[slot].set(
+                    hit.spectra)
+        if m > 0 and hit.mass is not None and self.cache.mass_pool is not None:
+            # re-seed the matched prefix from the snapshot (exact: the
+            # cumulative mass of queries [0, m) over positions [0, m)).
+            # Cells beyond m need no zeroing — the fused step resets each
+            # cell in-graph the step its position is appended.
+            self.cache.mass_pool = self.cache.mass_pool.at[:, slot, :m].set(
+                hit.mass)
+        return m
+
     def _admit(self) -> List[int]:
-        placed = self.sched.admit(self.now, self.cache.allocate)
+        with self._lock:
+            return self._admit_locked()
+
+    def _admit_locked(self) -> List[int]:
+        placed = self.sched.admit(self.now, self._can_allocate)
         any_other_live = self.sched.n_live() > len(placed)
         for slot, req, bucket in placed:
             st = self.sched.slots[slot]
@@ -360,17 +519,24 @@ class ServeEngine:
             # rank state: first decision is veto-free, fresh clock
             self.has_rank[slot] = False
             self.force_decide[slot] = False
+            self._spectra_pending.pop(slot, None)
             self._temp[slot] = req.temperature
             self._topk[slot] = req.top_k
+            self._topp[slot] = req.top_p
             self._seed[slot] = np.uint32(req.seed)
             if self.chunk is not None:
                 # chunked admission: stage the prompt on device and let the
                 # mixed fused steps consume it — no model work here, the
-                # loop never stalls on a monolithic prefill
+                # loop never stalls on a monolithic prefill. A prefix hit
+                # skips its reused tokens: chunked prefill starts at the
+                # reuse point.
                 buf = np.zeros((self.cache.max_len,), np.int32)
                 buf[:len(req.tokens)] = req.tokens
                 self.prompt_buf = self.prompt_buf.at[slot].set(
                     jnp.asarray(buf))
+                m = self._apply_prefix_hit(slot, req)
+                self._snaps[slot] = {}
+                self.stats["prefill_tokens"] += st.prompt_len - m
                 continue
             t0 = time.perf_counter()
             s = len(req.tokens)
@@ -378,10 +544,12 @@ class ServeEngine:
             padded[0, :s] = req.tokens
             logits, k_l, v_l, mass_l = self._prefill(
                 self.params, jnp.asarray(padded), np.int32(s))
-            if self.sampling and (req.temperature > 0 or req.top_k > 0):
+            if self.sampling and (req.temperature > 0 or req.top_k > 0
+                                  or req.top_p < 1.0):
                 tok0 = self._select1(logits[0, s - 1],
                                      np.float32(req.temperature),
                                      np.int32(req.top_k),
+                                     np.float32(req.top_p),
                                      np.uint32(req.seed))
             else:
                 tok0 = jnp.argmax(logits[0, s - 1]).astype(jnp.int32)
@@ -403,6 +571,7 @@ class ServeEngine:
             dt = time.perf_counter() - t0
             self.stats["prefill_s"] += dt
             self.stats["prefills"] += 1
+            self.stats["prefill_tokens"] += s
             if any_other_live:
                 # blocking admission: this prefill ran while other streams
                 # had decode work pending — the stall chunked mode removes
@@ -434,6 +603,7 @@ class ServeEngine:
         # One dispatch per boundary crossing, one executable for all slots.
         for i in np.nonzero(boundary)[0]:
             st = self.sched.slots[i]
+            first = not self.has_rank[i]
             (self.cache.ranks, self.cache.basis, self.cache.spectra,
              self.cache.kt_pool) = self._decide(
                 self.cache.k_pool, self.cache.mass_pool, self.cache.kt_pool,
@@ -442,6 +612,14 @@ class ServeEngine:
                 np.bool_(self.has_rank[i]), np.int32(st.t))
             st.t += 1
             self.stats["decides"] += 1
+            if first:
+                # lazy prefix-snapshot completion: the slot's first
+                # decision is the prompt decision — persist its layer-0
+                # spectra on the cached prefix node (informational warm
+                # start for future hits; parity-neutral)
+                node = self._spectra_pending.pop(i, None)
+                if node is not None:
+                    node.snap_spectra = self.cache.spectra[i]
         self.has_rank |= boundary
         self.force_decide &= ~boundary
 
@@ -509,7 +687,7 @@ class ServeEngine:
                 self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
                 self.cache.basis, self._active_dev, self.out_buf,
                 self._plen_dev, self._temp_dev, self._topk_dev,
-                self._seed_dev, *extra)
+                self._topp_dev, self._seed_dev, *extra)
             self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
             self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
             self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
@@ -529,13 +707,33 @@ class ServeEngine:
                     q = q_host[i]
                     st.prefilled += q
                     self.cache.lens[i] += q       # host mirror of _lens_dev
-                    if st.prefilled == st.prompt_len:
+                    done_pf = st.prefilled == st.prompt_len
+                    if (self.prefix is not None
+                            and (done_pf
+                                 or st.prefilled % self.cache.page_size
+                                 == 0)):
+                        # exact cumulative-mass snapshot: the accumulator
+                        # holds queries [0, prefilled) and nothing more,
+                        # because chunked prefill paused exactly here
+                        self._snaps[i][st.prefilled] = (
+                            None if self.cache.mass_pool is None else
+                            self.cache.mass_pool[:, i, :st.prefilled])
+                    if done_pf:
                         st.n_out = 1              # token 0 emitted this step
                         st.latencies.append(now_t - st.admit_s)   # TTFT
                         self.stats["prefills"] += 1
                         self.request_first_tok_t[st.req.rid] = now_t
                         if tok_host is not None:
                             st.last_tok = int(tok_host[i])
+                        if self.prefix is not None:
+                            n_pg = self.cache.pages_needed(st.prompt_len)
+                            node = self.prefix.insert(
+                                st.req.tokens,
+                                [int(p) for p in
+                                 self.cache.page_table[i, :n_pg]],
+                                self._snaps.pop(i, {}))
+                            if node is not None and self._decide is not None:
+                                self._spectra_pending[i] = node
                     continue
                 st.decode_i += 1
                 st.n_out += 1

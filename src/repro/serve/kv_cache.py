@@ -16,6 +16,19 @@ page-table entry at it, so the fused step (which always runs all n_slots
 rows — static shapes) can scatter its dead-lane writes somewhere harmless
 instead of corrupting pages that were freed and re-issued to live streams.
 
+**Pages are refcounted** (`ref`): the prefix cache (serve/prefix.py)
+shares one physical page between every slot whose prompt starts with the
+same tokens, and keeps finished prompts' pages resident for future reuse.
+``allocate`` takes an optional leading run of already-filled shared pages
+(ref + 1 each), ``release`` *decrements* instead of freeing, and a page
+returns to the free list exactly when its last reference — slot or prefix
+tree — drops. The page-leak invariant generalises: ``ref[p] == (# slot
+page-table entries pointing at p) + (1 if the prefix tree caches p)``,
+and ``ref == 0  <=>  p is on the free list`` (``check_refs``). Shared
+pages are immutable to slots: admission places them strictly *before* a
+slot's first written position, and a partially-filled shared tail page is
+copied first (``copy_page`` — copy-on-write at admission).
+
 Per-slot serving state carried here besides the pool:
   * ``lens``   — host-mirrored valid prefix length per slot (int64 np);
                  the device copy is an input of every fused step, so the
@@ -32,24 +45,34 @@ Per-slot serving state carried here besides the pool:
                  Eq. 9 transition veto, so the veto measures the actual
                  segment-to-segment transition instead of comparing the
                  current spectra against themselves.
-  * ``mass_pool`` — per-key accumulated softmax attention mass, paged like
-                 K/V but per (layer, position, kv-head): seeded by the
-                 prefill's causal attention mass and advanced in-graph by
-                 every fused decode step. The segment decision builds its
-                 eigenbasis from the *weighted* Gram K^T diag(w) K, so the
-                 basis concentrates on directions that actually receive
-                 score mass — the same softmax-weighted fix that closed the
-                 prefill-path low-rank quality gap in models/lowrank_cache.
-  * ``kt_pool``— the paged K cache in factor form, kt = K . B_r (top r_max
-                 columns of the slot's segment basis): written for the
-                 whole slot when a decision refreshes the basis, appended
-                 per token by the fused step. The decode score contraction
-                 reads kt (r_max/d of the dense K bytes) instead of K;
-                 dense K stays resident only for basis refresh and drift.
+  * ``mass_pool`` — per-key accumulated softmax attention mass,
+                 **slot-indexed** ``(L, n_slots, max_len, hkv)``: seeded by
+                 the prefill's causal attention mass and advanced in-graph
+                 by every fused decode step. The segment decision builds
+                 its eigenbasis from the *weighted* Gram K^T diag(w) K, so
+                 the basis concentrates on directions that actually
+                 receive score mass. Mass is per-*stream* state (which
+                 queries attended), not per-page state — a physical page
+                 shared between two prefix-hit slots receives different
+                 mass from each — so unlike K/V it is NOT paged; the row
+                 is zeroed at admission and, on a prefix hit, re-seeded
+                 from the tree's snapshot.
+  * ``kt_pool``— the K cache in factor form, kt = K . B_r (top r_max
+                 columns of the slot's segment basis), **slot-indexed**
+                 ``(L, n_slots + 1, max_len, hkv, r_keep)`` (+1 scratch
+                 row for dead-lane writes): rewritten for the whole slot
+                 when a decision refreshes the basis, appended per token
+                 by the fused step. Like the basis it factors against, kt
+                 is per-slot state — two slots sharing prefix K pages hold
+                 different bases, so their factors of the *same* physical
+                 page differ. The decode score contraction reads kt
+                 (r_max/d of the dense K bytes); dense K stays resident
+                 only for basis refresh and drift.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from collections import Counter
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -59,7 +82,7 @@ from repro.configs.base import ModelConfig
 
 
 class PagedKVCache:
-    """Page pool + page tables + per-slot serving state."""
+    """Refcounted page pool + page tables + per-slot serving state."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
                  page_size: int = 16, n_pages: Optional[int] = None,
@@ -79,6 +102,7 @@ class PagedKVCache:
         self.v_pool = jnp.zeros((L, self.n_pages, page_size, hkv, dh), dtype)
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self._free: List[int] = list(range(self.n_pages - 1, 0, -1))  # not 0
+        self.ref = np.zeros((self.n_pages,), np.int32)
         self.lens = np.zeros((n_slots,), np.int64)
         self.rank_on = cfg.rank.mode != "off"
         r_max = int(cfg.rank.rank_grid[-1]) if self.rank_on else dh
@@ -99,11 +123,11 @@ class PagedKVCache:
         # weighted-Gram + veto state only exist on the rank path; the
         # factor pool additionally needs the engine to opt in (it trades
         # r_max/d of the K bytes for r_max/d extra cache memory)
-        self.mass_pool = (jnp.zeros((L, self.n_pages, page_size, hkv),
+        self.mass_pool = (jnp.zeros((L, n_slots, self.max_len, hkv),
                                     jnp.float32) if self.rank_on else None)
         self.spectra = (jnp.zeros((n_slots, hkv, dh), jnp.float32)
                         if self.rank_on else None)
-        self.kt_pool = (jnp.zeros((L, self.n_pages, page_size, hkv,
+        self.kt_pool = (jnp.zeros((L, n_slots + 1, self.max_len, hkv,
                                    self.r_keep), dtype)
                         if self.factored else None)
 
@@ -116,41 +140,100 @@ class PagedKVCache:
     def pages_needed(self, total_len: int) -> int:
         return -(-total_len // self.page_size)
 
-    def allocate(self, slot: int, total_len: int) -> bool:
+    def retain(self, pages: Iterable[int]) -> None:
+        """Add one reference to each page (prefix-tree insertion)."""
+        for p in pages:
+            if p == 0:
+                raise ValueError("cannot retain the scratch page")
+            self.ref[p] += 1
+
+    def unref(self, pages: Iterable[int]) -> None:
+        """Drop one reference per page; a page whose last reference drops
+        returns to the free list."""
+        for p in pages:
+            r = int(self.ref[p]) - 1
+            if r < 0:
+                raise AssertionError(f"refcount underflow on page {p}")
+            self.ref[p] = r
+            if r == 0:
+                self._free.append(int(p))
+
+    def allocate(self, slot: int, total_len: int,
+                 prefix_pages: Sequence[int] = ()) -> bool:
         """Reserve pages covering ``total_len`` tokens for ``slot``.
-        Returns False (no mutation) when the pool can't cover it."""
+
+        ``prefix_pages`` is a leading run of already-filled shared pages
+        (a prefix-cache hit): they become the slot's first page-table
+        entries with ref + 1 each, and only the remainder is drawn from
+        the free list. Returns False (no mutation) when the free pool
+        can't cover the fresh remainder."""
         need = self.pages_needed(total_len)
-        if need > self.pages_per_slot or need > len(self._free):
+        fresh = need - len(prefix_pages)
+        if need > self.pages_per_slot or fresh < 0 or fresh > len(self._free):
             return False
-        pages = [self._free.pop() for _ in range(need)]
+        pages = list(prefix_pages) + [self._free.pop() for _ in range(fresh)]
+        self.retain(prefix_pages)
+        for p in pages[len(prefix_pages):]:
+            self.ref[p] += 1            # fresh pages: 0 -> 1
         self.page_table[slot, :] = 0
         self.page_table[slot, :need] = pages
         self.lens[slot] = 0
         return True
 
     def release(self, slot: int) -> None:
-        """Return the slot's pages to the pool and park it on scratch."""
-        for p in self.page_table[slot]:
-            if p != 0:
-                self._free.append(int(p))
+        """Drop the slot's references and park it on scratch. Pages still
+        held by the prefix tree (or another sharing slot) stay out of the
+        free list until their last reference drops."""
+        self.unref(int(p) for p in self.page_table[slot] if p != 0)
         self.page_table[slot, :] = 0
         self.lens[slot] = 0
 
     def live_pages(self) -> Dict[int, List[int]]:
-        """slot -> owned physical pages (for invariant checks)."""
+        """slot -> referenced physical pages (for invariant checks)."""
         return {s: [int(p) for p in row if p != 0]
                 for s, row in enumerate(self.page_table)}
 
-    # -- device-side prefill write --------------------------------------
+    def check_refs(self, tree_pages: Iterable[int] = ()) -> None:
+        """Assert the refcount invariant: every page's refcount equals its
+        slot page-table references plus its prefix-tree references, free
+        pages are exactly the zero-ref pages, each listed once."""
+        counts: Counter = Counter()
+        for row in self.page_table:
+            for p in row:
+                if p:
+                    counts[int(p)] += 1
+        for p in tree_pages:
+            counts[int(p)] += 1
+        free = Counter(self._free)
+        assert 0 not in counts and 0 not in free, "scratch page referenced"
+        assert all(v == 1 for v in free.values()), "free-list duplicate"
+        for p in range(1, self.n_pages):
+            expect = counts.get(p, 0)
+            got = int(self.ref[p])
+            assert got == expect, \
+                f"page {p}: refcount {got} != {expect} references"
+            assert (free.get(p, 0) == 1) == (expect == 0), \
+                f"page {p}: ref {expect} but free-list presence " \
+                f"{free.get(p, 0)}"
+
+    # -- device-side page ops -------------------------------------------
+
+    def copy_page(self, dst: int, src: int) -> None:
+        """Copy one physical page's K/V contents (copy-on-write: a prefix
+        hit whose shared tail page is only partially filled gets a private
+        copy to append into — the shared original stays immutable)."""
+        self.k_pool = self.k_pool.at[:, dst].set(self.k_pool[:, src])
+        self.v_pool = self.v_pool.at[:, dst].set(self.v_pool[:, src])
 
     def write_prefill(self, slot: int, k_layers: jnp.ndarray,
                       v_layers: jnp.ndarray,
                       mass_layers: Optional[jnp.ndarray] = None) -> None:
         """Scatter a prefilled (L, s, hkv, dh) K/V run into the slot's pages
-        and set its length. ``mass_layers`` (L, s, hkv), when given, seeds
-        the slot's attention-mass accumulator with the prompt's per-key
-        causal attention mass. Control-plane op (one dispatch per
-        admission)."""
+        and set its length. The slot's attention-mass row is zeroed (a
+        recycled slot must not keep its previous occupant's mass) and,
+        when ``mass_layers`` (L, s, hkv) is given, re-seeded with the
+        prompt's per-key causal attention mass. Control-plane op (one
+        dispatch per admission)."""
         s = k_layers.shape[1]
         pos = np.arange(s)
         phys = jnp.asarray(self.page_table[slot][pos // self.page_size])
@@ -159,9 +242,12 @@ class PagedKVCache:
             k_layers.astype(self.k_pool.dtype))
         self.v_pool = self.v_pool.at[:, phys, off].set(
             v_layers.astype(self.v_pool.dtype))
-        if mass_layers is not None and self.mass_pool is not None:
-            self.mass_pool = self.mass_pool.at[:, phys, off].set(
-                mass_layers.astype(self.mass_pool.dtype))
+        if self.mass_pool is not None:
+            mp = self.mass_pool.at[:, slot].set(0.0)
+            if mass_layers is not None:
+                mp = mp.at[:, slot, :s].set(
+                    mass_layers.astype(self.mass_pool.dtype))
+            self.mass_pool = mp
         self.lens[slot] = s
 
     # -- logical views ---------------------------------------------------

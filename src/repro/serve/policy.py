@@ -107,8 +107,12 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
         # softmax-weighted Gram: w is the accumulated per-key attention
         # mass, normalised to sum kv_len so the spectra stay on the plain
         # Gram's scale (weights 1 per key); zero mass (state written
-        # outside the engine) degrades to uniform weights == plain Gram
-        w = jnp.swapaxes(mass_pool[:, pt_row].reshape(L, M, -1), 1, 2)
+        # outside the engine) degrades to uniform weights == plain Gram.
+        # mass is slot-indexed (per-stream state, not per-page — shared
+        # prefix pages receive different mass from each sharing slot), so
+        # the gather is a plain row slice, no page indirection
+        w_row = jax.lax.dynamic_slice_in_dim(mass_pool, slot, 1, 1)[:, 0]
+        w = jnp.swapaxes(w_row, 1, 2)                     # (L, h, M)
         w = jnp.maximum(w, 0.0) * valid[None, None, :]    # (L, h, M)
         tot = jnp.sum(w, axis=-1, keepdims=True)
         n_valid = jnp.maximum(kv_len.astype(jnp.float32), 1.0)
@@ -177,13 +181,14 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
             # factor-form refresh: re-project the slot's whole K run onto
             # the new basis so the fused step's factor reads stay
             # consistent across the basis switch (positions beyond kv_len
-            # are already zeroed in kk; scratch-page entries in the page
-            # table absorb the leftover writes harmlessly)
+            # are already zeroed in kk). kt is slot-indexed — the factors
+            # depend on this slot's basis, so a shared prefix page's keys
+            # are re-projected into the slot's OWN row, never into state
+            # another slot reads
             kt = jnp.einsum("lhmd,lhdr->lmhr", kk, evecs_l[..., :r_keep])
-            pages = pt_row.shape[0]
-            ps = kt_pool.shape[2]
-            kt = kt.reshape(L, pages, ps, kt.shape[2], r_keep)
-            kt_pool = kt_pool.at[:, pt_row].set(kt.astype(kt_pool.dtype))
+            kt_pool = jax.lax.dynamic_update_slice(
+                kt_pool, kt[:, None].astype(kt_pool.dtype),
+                (0, slot, 0, 0, 0))
         return ranks, basis, spectra, kt_pool
 
     return decide

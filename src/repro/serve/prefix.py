@@ -1,0 +1,317 @@
+"""Shared-prefix KV reuse: a token-level radix tree over page-granularity
+prefixes, with refcounted page sharing, low-rank state snapshots, and
+copy-on-write.
+
+Real multi-tenant traffic is dominated by shared prompt prefixes (system
+prompts, few-shot templates, multi-turn chat). The K/V values of a
+position are a pure function of the token prefix, so once one stream has
+prefilled a prompt, every later stream whose prompt starts with the same
+tokens can point its leading page-table entries at the **same physical
+pages** (kv_cache refcounts) and enter chunked prefill at the divergence
+point — no attention is re-run over the matched prefix.
+
+What cannot be shared is the DR-RL per-stream low-rank state: the
+attention-mass accumulator feeding the weighted-Gram basis (PAPER.md
+Eq. 12) and the factor cache ``kt = K . B_r`` are functions of *which
+queries attended* and of the slot's own basis, so they live slot-indexed
+in the cache (not paged). Instead the tree snapshots, per cached prefix,
+the **cumulative prompt attention mass** — the mass over positions
+``[0, m)`` from queries ``[0, m)`` exactly — and a prefix hit rehydrates
+its slot's mass row from the snapshot. The hit slot's first segment
+decision then builds the same weighted-Gram basis, Eq. 9 veto state and
+(re-projected) kt row a cold admission would have built: prefix-hit
+admission stays token-for-token identical to cold admission.
+
+Exactness dictates where reuse points live: a cumulative mass snapshot
+at position ``m`` can only be captured when the engine's chunked prefill
+pauses exactly at ``m`` (the in-graph accumulator then holds queries
+``[0, m)`` and nothing more). The engine captures one snapshot at every
+page-aligned chunk boundary plus one at the prompt end, and ``match``
+snaps reuse down to the deepest such point — matching is token-granular,
+reuse is snapshot-granular. (Run ``prefill_chunk`` as a multiple of
+``page_size`` — the serve default — for a snapshot at every page.)
+
+Memory: a chain of nodes for a P-token prompt stores cumulative
+snapshots of sizes ps, 2·ps, …, P — O(P²/ps) float32 mass cells per
+cached prompt (vs O(P·d) for its K/V pages; at serve-scale prompts the
+ratio is roughly P/(2·ps·2·dh)). The cost is bounded by the same LRU
+that bounds page residency — evicting a node frees its snapshot — and
+is the price of *exact* rehydration: mass at a position keeps receiving
+contributions from every later prompt query, so per-node deltas are just
+as dense and only the cut density (one snapshot per page) is tunable.
+
+Node structure: each node owns an edge label (token run), the physical
+pages whose first token falls inside its span (as ``{page_index: phys}``
+— a deeper node's entry overrides an ancestor's, which is how a branch
+created at a mid-page divergence carries its own copy of the straddling
+page), the mass snapshot valid at its end position (``snap_ok``), and an
+LRU stamp. Splitting a node invalidates the cut point's snapshot (the
+aggregate mass cannot be decomposed by query range) but keeps the deeper
+half's; a later insertion ending exactly at an unsnapshotted node heals
+it. Eviction is leaf-first LRU: dropping a node unrefs its pages, and a
+page returns to the free list when no slot shares it either ("zero live
+refs => reclaimable").
+
+Copy-on-write: a reuse point at a prompt end need not be page-aligned,
+so a hit may share a **partially-filled tail page**. Shared pages are
+immutable to slots — the hit slot would append its divergent tokens into
+that page — so admission gives the slot a private copy of the tail page
+(``PagedKVCache.copy_page``) and the shared original stays pristine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.kv_cache import PagedKVCache
+
+
+class RadixNode:
+    """One edge of the prefix tree; the path from the root spells the
+    cached token prefix ``[0, end)``."""
+
+    __slots__ = ("tokens", "end", "pages", "children", "parent",
+                 "snap_ok", "snap_mass", "snap_spectra", "last_used")
+
+    def __init__(self, tokens: np.ndarray, end: int,
+                 parent: Optional["RadixNode"] = None):
+        self.tokens = np.asarray(tokens, np.int32)
+        self.end = end                     # prefix length at this node
+        self.pages: Dict[int, int] = {}    # page_index -> physical page id
+        self.children: Dict[int, "RadixNode"] = {}
+        self.parent = parent
+        self.snap_ok = False               # end is an exact reuse point
+        self.snap_mass: Optional[Any] = None      # (L, end, hkv) or None
+        self.snap_spectra: Optional[Any] = None   # (hkv, dh), lazy
+        self.last_used = 0
+
+    @property
+    def start(self) -> int:
+        return self.end - len(self.tokens)
+
+
+@dataclass
+class MatchResult:
+    """A prefix lookup: ``reuse_len`` tokens (< prompt length) whose K/V
+    live in ``pages``; ``cow_src`` is the shared partially-filled tail
+    page to copy-on-write (None when the reuse point is page-aligned);
+    ``mass``/``spectra`` are the snapshot to rehydrate the slot's
+    low-rank state from; ``nodes`` is the matched path (LRU-protected
+    while the admission that looked it up is in flight)."""
+    reuse_len: int = 0
+    pages: List[int] = field(default_factory=list)
+    cow_src: Optional[int] = None
+    mass: Optional[Any] = None
+    spectra: Optional[Any] = None
+    nodes: List[RadixNode] = field(default_factory=list)
+
+
+class PrefixCache:
+    """Radix tree over cached prompt prefixes, sharing pages of one
+    :class:`PagedKVCache` via its refcounts."""
+
+    def __init__(self, cache: PagedKVCache):
+        self.cache = cache
+        self.ps = cache.page_size
+        self.root = RadixNode(np.zeros((0,), np.int32), 0)
+        self._clock = 0
+        self.n_nodes = 0
+
+    def _touch(self, node: RadixNode) -> None:
+        node.last_used = self._clock
+        self._clock += 1
+
+    def touch_path(self, nodes: Sequence[RadixNode]) -> None:
+        """Advance the LRU stamp of a committed match's path."""
+        for n in nodes:
+            self._touch(n)
+
+    # -- lookup ----------------------------------------------------------
+
+    def match(self, tokens: np.ndarray) -> MatchResult:
+        """Longest reusable prefix of ``tokens``: the deepest fully-matched
+        node with a valid snapshot at most ``len(tokens) - 1`` deep (at
+        least one prompt token must be computed to produce the first
+        logits). Read-only — LRU stamps are advanced by ``touch_path``
+        only when the caller actually commits to the hit, so a request
+        blocked on page pressure re-matching every step does not inflate
+        its path's recency over genuinely served prefixes."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        P = len(tokens)
+        node, i = self.root, 0
+        pages: Dict[int, int] = {}
+        path: List[RadixNode] = []
+        best: Optional[RadixNode] = None
+        best_pages: Optional[Dict[int, int]] = None
+        while i < P:
+            child = node.children.get(int(tokens[i]))
+            if child is None:
+                break
+            e = len(child.tokens)
+            if e > P - i or not np.array_equal(child.tokens, tokens[i:i + e]):
+                break                      # divergence mid-edge: no deeper
+            node = child                   # reuse point can complete
+            i += e
+            pages.update(child.pages)      # deeper copies override
+            path.append(child)
+            if child.snap_ok and child.end <= P - 1:
+                best, best_pages = child, dict(pages)
+        if best is None:
+            return MatchResult(nodes=path)
+        m = best.end
+        plist = []
+        for f in range(-(-m // self.ps)):
+            assert f in best_pages, \
+                f"prefix tree path to depth {m} is missing page {f}"
+            plist.append(best_pages[f])
+        cow = plist[-1] if m % self.ps else None
+        return MatchResult(reuse_len=m, pages=plist, cow_src=cow,
+                           mass=best.snap_mass, spectra=best.snap_spectra,
+                           nodes=path)
+
+    # -- insertion -------------------------------------------------------
+
+    def _split(self, node: RadixNode, j: int) -> None:
+        """Cut ``node``'s edge after ``j`` tokens: ``node`` keeps the top
+        half (its snapshot is invalidated — the aggregate mass cannot be
+        decomposed at an arbitrary cut), a new child keeps the bottom
+        half, the original children, the snapshot, and the pages whose
+        first token moved below the cut."""
+        cut = node.start + j
+        bottom = RadixNode(node.tokens[j:], node.end, parent=node)
+        bottom.children = node.children
+        for ch in bottom.children.values():
+            ch.parent = bottom
+        bottom.snap_ok, bottom.snap_mass = node.snap_ok, node.snap_mass
+        bottom.snap_spectra = node.snap_spectra
+        bottom.last_used = node.last_used
+        bottom.pages = {f: p for f, p in node.pages.items()
+                        if f * self.ps >= cut}
+        node.pages = {f: p for f, p in node.pages.items()
+                      if f * self.ps < cut}
+        node.tokens = node.tokens[:j]
+        node.end = cut
+        node.snap_ok, node.snap_mass, node.snap_spectra = False, None, None
+        node.children = {int(bottom.tokens[0]): bottom}
+        self.n_nodes += 1
+
+    def _heal(self, node: RadixNode, snaps: Dict[int, Any]) -> None:
+        """An insertion ending exactly at an unsnapshotted node (e.g. the
+        top half of an old split) makes its end an exact reuse point."""
+        if not node.snap_ok and node.end in snaps and node.end > 0:
+            node.snap_mass = snaps[node.end]
+            node.snap_ok = True
+
+    def insert(self, tokens: np.ndarray, pages: Sequence[int],
+               snaps: Dict[int, Any]) -> Optional[RadixNode]:
+        """Cache a fully-prefilled prompt. ``pages`` are the inserting
+        slot's physical pages for page indices ``0..ceil(P/ps)-1``;
+        ``snaps`` maps exact snapshot positions (page-aligned chunk
+        boundaries and the prompt end) to the cumulative mass captured
+        there (None on the rank-off path — the position is still an exact
+        reuse point). New nodes are cut at snapshot positions so every
+        future hit lands on one; their pages gain a tree reference.
+        Returns the deepest node of this prompt (for the engine's lazy
+        spectra capture), or None when the prompt added nothing new."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        P = len(tokens)
+        node, i = self.root, 0
+        while i < P:
+            child = node.children.get(int(tokens[i]))
+            if child is None:
+                break
+            e = len(child.tokens)
+            n = min(e, P - i)
+            j = 0
+            while j < n and child.tokens[j] == tokens[i + j]:
+                j += 1
+            if j == e:                       # full edge match
+                node = child
+                i += e
+                self._touch(child)
+                self._heal(child, snaps)
+                continue
+            if j > 0:                        # diverged (or ended) mid-edge
+                self._split(child, j)
+                node = child
+                i += j
+                self._touch(child)
+                self._heal(child, snaps)
+            break
+        if i >= P:
+            return node if node is not self.root else None
+        # extend with a chain cut at the exact snapshot positions, so each
+        # new node's end is a valid reuse point. The first segment owns its
+        # (private) copy of a page straddling a mid-page start; later cuts
+        # are page-aligned by construction.
+        cuts = sorted({p for p in snaps
+                       if i < p < P and p % self.ps == 0} | {P})
+        start = i
+        for c in cuts:
+            nn = RadixNode(tokens[start:c], c, parent=node)
+            # floor(start/ps): a mid-page start claims the (private) copy
+            # of the straddling page; aligned starts claim from their own
+            # first page (floor == ceil there)
+            nn.pages = {f: int(pages[f])
+                        for f in range(start // self.ps, -(-c // self.ps))}
+            self.cache.retain(nn.pages.values())
+            nn.snap_ok = c in snaps
+            nn.snap_mass = snaps.get(c)
+            node.children[int(tokens[start])] = nn
+            self._touch(nn)
+            self.n_nodes += 1
+            node, start = nn, c
+        return node
+
+    # -- eviction --------------------------------------------------------
+
+    def all_pages(self) -> List[int]:
+        """Every physical page the tree references (invariant checks)."""
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            out.extend(n.pages.values())
+            stack.extend(n.children.values())
+        return out
+
+    def _leaves(self) -> List[RadixNode]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    def evict_lru(self, n_pages_needed: int,
+                  protect: Sequence[RadixNode] = ()) -> int:
+        """Drop least-recently-used leaves until ``n_pages_needed`` pages
+        actually returned to the free list. Only leaves that would free
+        at least one page (some page solely tree-referenced) — or that
+        own no pages at all (split residue that would otherwise block
+        its ancestors forever) — are victims: dropping a leaf whose
+        pages are all still held by live slots frees nothing now and
+        loses future reuse, so when no leaf can free anything the tree
+        is left intact and the caller's allocation simply fails.
+        ``protect`` pins the path of an in-flight admission. Returns the
+        number of pages freed."""
+        pinned = {id(n) for n in protect}
+        freed = 0
+        while freed < n_pages_needed:
+            victims = [n for n in self._leaves() if id(n) not in pinned
+                       and (not n.pages
+                            or any(int(self.cache.ref[p]) == 1
+                                   for p in n.pages.values()))]
+            if not victims:
+                break
+            victim = min(victims, key=lambda n: n.last_used)
+            before = self.cache.free_pages
+            self.cache.unref(victim.pages.values())
+            del victim.parent.children[int(victim.tokens[0])]
+            self.n_nodes -= 1
+            freed += self.cache.free_pages - before
+        return freed
+

@@ -5,10 +5,14 @@ The data plane (pools, fused step) lives in kv_cache.py / engine.py.
 
 Admission is FIFO over *arrived* requests: a request joins a free slot as
 soon as one exists, its arrival step has passed, and the page pool can
-cover ``prompt_len + max_new`` tokens. Prefill lengths are bucketed
-(powers of two by default) so the prefill executable compiles once per
-bucket, not once per prompt length. Eviction happens on EOS or when
-``max_new`` tokens have been decoded; the slot's pages return to the pool.
+cover ``prompt_len + max_new`` tokens (under prefix caching the
+``can_allocate`` hook also matches the prompt against the radix tree and
+shares the hit's pages). Prefill lengths are bucketed (powers of two by
+default) so the prefill executable compiles once per bucket, not once per
+prompt length. Eviction happens on EOS or when ``max_new`` tokens have
+been decoded; releasing a slot *decrements* its pages' refcounts — a page
+returns to the pool when its last reference (sharing slot or cached
+prefix) drops.
 """
 from __future__ import annotations
 
@@ -23,11 +27,12 @@ import numpy as np
 class Request:
     """One generation request. ``tokens`` is the prompt (1-D int array).
 
-    ``temperature``/``top_k``/``seed`` are the in-graph sampling knobs
-    (repro.serve.api.SamplingParams maps onto them): temperature 0 is
-    greedy argmax; top_k 0 samples the full vocabulary; the seed keys a
-    per-token PRNG fold so a stream's draw sequence is reproducible
-    regardless of engine batching."""
+    ``temperature``/``top_k``/``top_p``/``seed`` are the in-graph sampling
+    knobs (repro.serve.api.SamplingParams maps onto them): temperature 0
+    is greedy argmax; top_k 0 samples the full vocabulary; top_p 1
+    disables the nucleus cut; the seed keys a per-token PRNG fold so a
+    stream's draw sequence is reproducible regardless of engine
+    batching."""
     rid: int
     tokens: np.ndarray
     max_new: int
@@ -35,6 +40,7 @@ class Request:
     eos_id: Optional[int] = None
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     seed: int = 0
 
     def __post_init__(self):
@@ -49,6 +55,8 @@ class Request:
             raise ValueError(f"negative temperature {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"negative top_k {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
 
 
 @dataclass

@@ -172,6 +172,119 @@ def test_topk_masks_tail(setup):
     np.testing.assert_array_equal(h_k1.result(), h_greedy.result())
 
 
+def test_top_p_validation(setup):
+    cfg, params = setup
+    for bad in (0.0, -0.5, 1.2):
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingParams(top_p=bad)
+        with pytest.raises(ValueError, match="top_p"):
+            Request(rid=0, tokens=np.arange(3), max_new=1, top_p=bad)
+    greedy_only = _engine(cfg, params, sampling=False)
+    with pytest.raises(ValueError, match="sampling=False"):
+        greedy_only.submit(np.arange(8, dtype=np.int32),
+                           SamplingParams(max_new=4, temperature=1.0,
+                                          top_p=0.5))
+    # the nucleus cut is a compiled-in full-vocab sort: engines that did
+    # not opt in reject top_p requests instead of silently paying for it
+    no_nucleus = _engine(cfg, params)
+    with pytest.raises(ValueError, match="nucleus"):
+        no_nucleus.submit(np.arange(8, dtype=np.int32),
+                          SamplingParams(max_new=4, temperature=1.0,
+                                         top_p=0.5))
+    with pytest.raises(ValueError, match="nucleus"):
+        Engine(cfg, params,
+               config=EngineConfig(nucleus=True, sampling=False))
+
+
+def test_top_p_tiny_nucleus_is_greedy(setup):
+    """top_p -> 0 shrinks the nucleus to the single most likely token, so
+    hot sampling collapses to argmax."""
+    cfg, params = setup
+    prompt = np.random.default_rng(11).integers(
+        0, cfg.vocab_size, 9).astype(np.int32)
+    eng = _engine(cfg, params, nucleus=True)
+    h_greedy = eng.submit(prompt, SamplingParams(max_new=6))
+    h_p = eng.submit(prompt, SamplingParams(max_new=6, temperature=2.0,
+                                            top_p=1e-9, seed=5))
+    eng.run()
+    np.testing.assert_array_equal(h_p.result(), h_greedy.result())
+
+
+def test_top_p_one_bypasses_nucleus_bitwise(setup):
+    """top_p == 1 rows take the exact pre-top-p sampling path: the same
+    stream draws bitwise identically on a nucleus-enabled engine and on
+    one compiled without the cut (same temperature/top_k/seed)."""
+    cfg, params = setup
+    prompt = np.random.default_rng(12).integers(
+        0, cfg.vocab_size, 10).astype(np.int32)
+
+    def draw(**over):
+        eng = _engine(cfg, params, **over)
+        h = eng.submit(prompt, SamplingParams(max_new=8, temperature=0.9,
+                                              top_k=12, seed=21))
+        eng.run()
+        return h.result()
+
+    np.testing.assert_array_equal(draw(), draw(nucleus=True))
+
+
+def test_top_p_draws_stay_inside_nucleus(setup):
+    """In-graph nucleus math vs a NumPy oracle: every sampled token must
+    lie in the smallest probability-sorted set reaching top_p mass, for a
+    mixed batch (greedy / top-k / top-p / combined) in ONE call."""
+    import jax.numpy as jnp
+    cfg, params = setup
+    eng = _engine(cfg, params, nucleus=True)
+    core = eng.core
+    rnd = np.random.default_rng(13)
+    ns, V = 4, cfg.vocab_size
+    logits = rnd.normal(scale=3.0, size=(ns, V)).astype(np.float32)
+    temps = np.asarray([0.0, 1.0, 0.8, 1.2], np.float32)
+    topks = np.asarray([0, 16, 0, 8], np.int32)
+    topps = np.asarray([1.0, 1.0, 0.7, 0.5], np.float32)
+    seeds = np.asarray([1, 2, 3, 4], np.uint32)
+
+    def nucleus(row):
+        lg = logits[row].copy()
+        if topks[row] > 0:
+            thr = np.sort(lg)[::-1][topks[row] - 1]
+            lg[lg < thr] = -np.inf
+        pr = np.exp(lg / max(temps[row], 1e-6)
+                    - np.max(lg / max(temps[row], 1e-6)))
+        pr /= pr.sum()
+        order = np.argsort(-pr)
+        cum = np.cumsum(pr[order])
+        n_keep = int(np.searchsorted(cum, topps[row]) + 1)
+        return set(order[:n_keep].tolist())
+
+    for pos in range(6):
+        tok = np.asarray(core._select_token(
+            jnp.asarray(logits), jnp.full((ns,), pos, jnp.int32),
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
+            jnp.asarray(seeds)))
+        assert tok[0] == np.argmax(logits[0])          # greedy row
+        for row in range(1, ns):
+            assert int(tok[row]) in nucleus(row), (pos, row)
+
+
+def test_top_p_parity_chunked_vs_oneshot(setup):
+    """The nucleus cut runs through the same (seed, output index) PRNG
+    fold: a top-p stream draws identically under chunked and one-shot
+    admission."""
+    cfg, params = setup
+    prompt = np.random.default_rng(14).integers(
+        0, cfg.vocab_size, 11).astype(np.int32)
+
+    def run(chunk):
+        eng = _engine(cfg, params, prefill_chunk=chunk, nucleus=True)
+        h = eng.submit(prompt, SamplingParams(max_new=8, temperature=0.8,
+                                              top_k=20, top_p=0.8, seed=9))
+        eng.run()
+        return h.result()
+
+    np.testing.assert_array_equal(run(4), run(None))
+
+
 # ---------------------------------------------------------------------------
 # deprecated AdaptiveServer shim
 # ---------------------------------------------------------------------------
@@ -264,6 +377,31 @@ def test_ttft_is_first_token_not_completion(setup):
     # token 0 lands after ~3 chunk steps out of ~11 total steps: TTFT must
     # be well below the full generation wall
     assert h.ttft_s is not None and h.ttft_s < 0.8 * wall, (h.ttft_s, wall)
+
+
+def test_on_token_callback_may_reenter_engine(setup):
+    """An on_token callback runs under the step lock; it must be able to
+    drive the engine itself (submit a follow-up and block on its result)
+    — the lock is reentrant, recursing instead of deadlocking."""
+    cfg, params = setup
+    rnd = np.random.default_rng(15)
+    pa = rnd.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    pb = rnd.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    eng = _engine(cfg, params)
+    follow = {}
+
+    def cb(idx, tok):
+        if idx == 2 and "h" not in follow:
+            follow["h"] = eng.submit(pb, SamplingParams(max_new=4))
+            follow["out"] = follow["h"].result()     # re-enters step()
+
+    ha = eng.submit(pa, SamplingParams(max_new=6), on_token=cb)
+    eng.run()
+    assert ha.done and follow["h"].done
+    solo = _engine(cfg, params)
+    hb = solo.submit(pb, SamplingParams(max_new=4))
+    solo.run()
+    np.testing.assert_array_equal(follow["out"], hb.result())
 
 
 def test_tokens_on_finished_handle_keeps_sync_free_loop(setup):

@@ -127,9 +127,7 @@ def _seed_mass(cfg, params, prompt, chunk):
         st = eng.sched.slots[0]
         while not st.active or st.mid_prefill:
             eng.step()
-    pt = eng.cache.page_table.copy()
-    m = np.asarray(eng.cache.mass_pool)[:, pt[0]]
-    return m.reshape(cfg.num_layers, -1, cfg.num_kv_heads)[:, :len(prompt)]
+    return np.asarray(eng.cache.mass_pool)[:, 0, :len(prompt)]
 
 
 def test_chunked_mass_seed_matches_oneshot():
