@@ -17,14 +17,21 @@
 - engine:    the step loop core — one fused decode executable over all
              live slots with per-row kv_len, per-row rank, and chunked
              prefill interleaved into the same step.
+- frontend:  the async front door — a background stepping thread per
+             engine (FrontEnd), awaitable/streaming handles with
+             cancellation, and a Router that load-balances N replicas
+             by queue depth with prefix-cache affinity, configured
+             through one FleetConfig.
 """
-from repro.serve.api import (Engine, EngineConfig, RequestHandle,
-                             SamplingParams, make_engine)
+from repro.serve.api import (Engine, EngineConfig, EngineStopped,
+                             RequestHandle, SamplingParams, make_engine)
 from repro.serve.engine import ServeEngine
+from repro.serve.frontend import FleetConfig, FrontEnd, Router
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.prefix import PrefixCache, RadixNode
 from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "EngineConfig", "RequestHandle", "SamplingParams",
-           "make_engine", "ServeEngine", "PagedKVCache", "PrefixCache",
+__all__ = ["Engine", "EngineConfig", "EngineStopped", "RequestHandle",
+           "SamplingParams", "make_engine", "ServeEngine", "FleetConfig",
+           "FrontEnd", "Router", "PagedKVCache", "PrefixCache",
            "RadixNode", "Request", "Scheduler"]

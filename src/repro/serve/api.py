@@ -122,9 +122,27 @@ class EngineConfig:
                              "(set prefill_chunk)")
 
 
+class EngineStopped(RuntimeError):
+    """The engine serving a handle died or was shut down mid-stream.
+
+    Raised from ``RequestHandle`` iterators / ``result()`` instead of
+    blocking forever: a front-end stepping thread that crashed, a
+    ``FrontEnd.shutdown()``, or an ``Engine.reset()`` that discarded the
+    request all mark their unfinished handles stopped."""
+
+
 @dataclass
 class RequestHandle:
-    """One submitted request: incremental tokens + completion state."""
+    """One submitted request: incremental tokens + completion state.
+
+    Tokens arrive through a per-request in-order queue (``_toks`` +
+    condition variable): with a background stepping thread attached
+    (repro.serve.frontend.FrontEnd) consumers block on the condition,
+    without one they drive ``engine.step()`` themselves — the same
+    handle supports ``for tok in h.tokens()``, ``async for tok in h``,
+    ``h.result()`` and the ``on_token`` callback. ``cancel()`` aborts
+    the request mid-stream (slot evicted, pages released); no token is
+    delivered after it returns."""
     rid: int
     prompt_len: int
     params: SamplingParams
@@ -134,32 +152,100 @@ class RequestHandle:
     _toks: List[int] = field(default_factory=list)
     _result: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None   # submit() -> first-token wall time
+    done_s: Optional[float] = None   # submit() -> completion wall time
+    replica: Optional[int] = None    # set by Router.submit
+    cancelled: bool = False
+    _stopped: bool = False
+    _cv: threading.Condition = field(default_factory=threading.Condition)
 
     @property
     def done(self) -> bool:
         return self._result is not None
 
+    def _check_stopped(self) -> None:
+        if self._stopped:
+            raise EngineStopped(
+                f"request {self.rid}: engine stopped after "
+                f"{len(self._toks)} token(s)")
+
+    def _advance(self, i: int, poll_s: float = 0.05) -> None:
+        """Block until token ``i`` exists (or the stream ended): wait on
+        the delivery condition while a background thread is stepping the
+        engine, drive ``engine.step()`` ourselves otherwise."""
+        if self._engine.driver_alive:
+            with self._cv:
+                if i >= len(self._toks) and not self.done \
+                        and not self._stopped:
+                    # timed wait: a driver that dies without marking its
+                    # handles (hard kill) still unblocks us to re-check
+                    self._cv.wait(poll_s)
+        else:
+            self._check_stopped()
+            self._engine.step()
+
     def tokens(self):
-        """Generator of generated token ids, in order, driving
-        ``engine.step()`` whenever it runs dry. Attaching a consumer makes
-        the engine sync emitted token values each step (the same per-step
-        sync an ``eos_id`` request already pays); handles that never
-        stream keep the sync-free loop and read results at eviction."""
+        """Generator of generated token ids, in order. Without a front-end
+        stepping thread it drives ``engine.step()`` whenever it runs dry;
+        with one it blocks until the thread delivers. Attaching a consumer
+        makes the engine sync emitted token values each step (the same
+        per-step sync an ``eos_id`` request already pays); handles that
+        never stream keep the sync-free loop and read results at
+        eviction. Raises :class:`EngineStopped` if the engine dies
+        mid-stream; a ``cancel()`` ends the iteration cleanly."""
         self._engine._ensure_streaming(self)
         i = 0
         while True:
             while i < len(self._toks):
                 yield self._toks[i]
                 i += 1
-            if self.done:
+            if self.done or self.cancelled:
                 return
-            self._engine.step()
+            self._check_stopped()
+            self._advance(i)
+
+    def __aiter__(self):
+        """``async for tok in handle`` — the blocking wait runs in a
+        worker thread (asyncio.to_thread) so the event loop stays free to
+        consume other handles concurrently."""
+        self._engine._ensure_streaming(self)
+        return self._agen()
+
+    async def _agen(self):
+        import asyncio
+        i = 0
+        while True:
+            tok = await asyncio.to_thread(self._next_blocking, i)
+            if tok is None:
+                return
+            yield tok
+            i += 1
+
+    def _next_blocking(self, i: int) -> Optional[int]:
+        """Token ``i`` (blocking), or None when the stream is over."""
+        while True:
+            if i < len(self._toks):
+                return self._toks[i]
+            if self.done or self.cancelled:
+                return None
+            self._check_stopped()
+            self._advance(i)
 
     def result(self) -> np.ndarray:
-        """Block until this request finishes; returns its generated ids."""
+        """Block until this request finishes; returns its generated ids
+        (the partial output if it was cancelled). Raises
+        :class:`EngineStopped` if the engine dies first."""
         while not self.done:
-            self._engine.step()
+            self._check_stopped()
+            self._advance(len(self._toks))
         return self._result
+
+    def cancel(self) -> bool:
+        """Abort this request: queued -> dropped, decoding/mid-prefill ->
+        slot evicted and pages released. ``result()`` then returns the
+        tokens delivered so far; iterators end cleanly. No token is
+        delivered after cancel() returns. Returns False if the request
+        had already finished."""
+        return self._engine.cancel(self.rid)
 
     # -- called by Engine ------------------------------------------------
 
@@ -167,14 +253,17 @@ class RequestHandle:
         """Deliver token ``idx``. Strictly in-order: anything already
         delivered is ignored, and a gap (idx beyond the next slot) is
         refused — the engine backfills from the device buffer first, so a
-        consumer never sees a garbled sequence."""
-        if idx != len(self._toks):
+        consumer never sees a garbled sequence. A cancelled or stopped
+        handle refuses delivery outright."""
+        if idx != len(self._toks) or self.cancelled or self._stopped:
             return
         self._toks.append(tok)
         if self.ttft_s is None and idx == 0:
             self.ttft_s = time.perf_counter() - self._submit_s
         if self.on_token is not None:
             self.on_token(idx, tok)
+        with self._cv:
+            self._cv.notify_all()
 
     def _finish(self, out: np.ndarray, first_tok_t: Optional[float]) -> None:
         # TTFT first: the backfill below would otherwise stamp token 0
@@ -184,6 +273,27 @@ class RequestHandle:
         for i in range(len(self._toks), len(out)):
             self._feed(i, int(out[i]))
         self._result = np.asarray(out, np.int32)
+        self.done_s = time.perf_counter() - self._submit_s
+        with self._cv:
+            self._cv.notify_all()
+
+    def _mark_cancelled(self) -> None:
+        """Seal the handle after an engine-level cancel: the result is
+        whatever was delivered before the cut."""
+        self.cancelled = True
+        self._result = np.asarray(self._toks, np.int32)
+        self.done_s = time.perf_counter() - self._submit_s
+        with self._cv:
+            self._cv.notify_all()
+
+    def _mark_stopped(self) -> None:
+        """The engine died / was reset with this request unfinished:
+        unblock every consumer with EngineStopped instead of hanging."""
+        if self.done:
+            return
+        self._stopped = True
+        with self._cv:
+            self._cv.notify_all()
 
 
 class Engine:
@@ -210,6 +320,10 @@ class Engine:
         self._next_rid = 0
         self._finished_seen = 0
         self._streaming: set = set()     # rids with an attached consumer
+        # background stepping thread (repro.serve.frontend.FrontEnd)
+        # driving this engine, if any: handles then wait for delivery
+        # instead of stepping, and reset() must strand no consumer
+        self._driver = None
         # submit() may run on a non-loop thread: rid assignment, handle
         # registration and the core queue append form one critical section
         self._submit_lock = threading.Lock()
@@ -256,14 +370,42 @@ class Engine:
             if on_token is not None:
                 self._streaming.add(rid)
                 self.core._stream_sync = True
+        drv = self._driver
+        if drv is not None:
+            drv.wake()                   # a parked stepping thread resumes
         return h
+
+    @property
+    def driver_alive(self) -> bool:
+        """True while a background stepping thread owns the step loop."""
+        drv = self._driver
+        return drv is not None and drv.alive
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a submitted request (see :meth:`RequestHandle.cancel`).
+        Serialised against the step loop: no fused step is in flight
+        while the slot is evicted, and no token is delivered after the
+        handle is sealed. Returns False if already finished/cancelled."""
+        with self._step_lock:
+            h = self._handles.get(rid)
+            if h is None or h.done:
+                return False
+            self.core.cancel(rid)
+            h._mark_cancelled()   # sealed under the step lock: no feed races
+            self._streaming.discard(rid)
+            if not self._streaming:
+                self.core._stream_sync = False
+            return True
 
     def _ensure_streaming(self, handle: RequestHandle) -> None:
         if handle.done:
             return        # tokens already delivered; nothing left to sync
-        self._streaming.add(handle.rid)
-        self.core._stream_sync = True
-        self._backfill(handle)
+        # the backfill reads scheduler/device state a concurrent stepping
+        # thread mutates: take a whole-iteration slice of the step lock
+        with self._step_lock:
+            self._streaming.add(handle.rid)
+            self.core._stream_sync = True
+            self._backfill(handle)
 
     def _backfill(self, handle: RequestHandle) -> None:
         """Deliver any tokens this handle's slot emitted before (or
@@ -280,14 +422,17 @@ class Engine:
     # -- step loop -------------------------------------------------------
 
     def warmup(self) -> float:
-        dt = self.core.warmup()
-        # compile time is reported separately (stats['compile_s']); a
-        # handle submitted before warmup should not charge it to TTFT
-        now = time.perf_counter()
-        for h in self._handles.values():
-            if not h.done and h.ttft_s is None:
-                h._submit_s = max(h._submit_s, now)
-        return dt
+        # under the step lock: warmup touches the pools a concurrent
+        # stepping thread would otherwise race
+        with self._step_lock:
+            dt = self.core.warmup()
+            # compile time is reported separately (stats['compile_s']); a
+            # handle submitted before warmup should not charge it to TTFT
+            now = time.perf_counter()
+            for h in self._handles.values():
+                if not h.done and h.ttft_s is None:
+                    h._submit_s = max(h._submit_s, now)
+            return dt
 
     def step(self) -> bool:
         """One engine iteration; returns True while work remains.
@@ -344,18 +489,46 @@ class Engine:
 
     def reset(self) -> None:
         """Drop all requests/handles but keep the compiled executables.
-        Serialised against concurrent step()/submit() callers."""
+        Serialised against concurrent step()/submit() callers — safe with
+        a live front-end stepping thread: the thread is between
+        iterations while we hold the step lock, every unfinished handle
+        is marked stopped first (its consumers unblock with
+        :class:`EngineStopped` instead of waiting on tokens that will
+        never come), and the thread's next step() sees an empty engine
+        and parks."""
         with self._step_lock, self._submit_lock:
+            for h in self._handles.values():
+                h._mark_stopped()
             self.core.reset()
             self._handles.clear()
             self._finished_seen = 0
             self._streaming.clear()
+
+    def drain(self) -> None:
+        """Block until every submitted request has finished (driving the
+        loop here only when no stepping thread owns it)."""
+        with self._submit_lock:
+            handles = list(self._handles.values())
+        for h in handles:
+            if not h.cancelled:
+                h.result()
 
     # -- introspection ---------------------------------------------------
 
     @property
     def stats(self) -> Dict:
         return self.core.stats
+
+    @property
+    def depth(self) -> int:
+        """Requests in the system (queued + admitted) — the router's
+        load signal."""
+        return self.core.depth
+
+    def prefix_probe(self, prompt) -> int:
+        """Longest cached-prefix length this engine could reuse for
+        ``prompt`` right now (0 without a prefix cache); read-only."""
+        return self.core.prefix_probe(prompt)
 
     def ttft(self) -> Dict[int, float]:
         """Per-request submit()->first-token wall seconds (finished or

@@ -250,6 +250,49 @@ class ServeEngine:
         with self._lock:
             self.sched.submit(req)
 
+    def cancel(self, rid: int) -> bool:
+        """Abort a request mid-flight: a queued request is dropped, an
+        admitted one (decoding OR mid-prefill) is evicted and its pages
+        released (refcounted: pages shared with the prefix tree or
+        another slot stay resident). Returns False when ``rid`` is not
+        live (already finished, already cancelled, or never submitted).
+
+        Callers driving a concurrent step loop must serialise this
+        against step() (repro.serve.api.Engine.cancel holds the step
+        lock) — the engine lock here only guards the queue and the page
+        accounting against a racing submit/admission."""
+        with self._lock:
+            if self.sched.cancel_pending(rid):
+                return True
+            for i, st in enumerate(self.sched.slots):
+                if st.active and st.req.rid == rid:
+                    outputs = np.asarray(self.out_buf[i, :st.n_out]).tolist()
+                    self.sched.evict(i, self.cache.release, outputs)
+                    # a mid-prefill cancel leaves no prefix insertion and
+                    # no pending spectra capture for this slot
+                    self._hits.pop(i, None)
+                    self._snaps.pop(i, None)
+                    self._spectra_pending.pop(i, None)
+                    self._dirty = True
+                    return True
+        return False
+
+    @property
+    def depth(self) -> int:
+        """Queue depth: pending + admitted requests (the router's
+        load-balancing signal)."""
+        with self._lock:
+            return self.sched.depth()
+
+    def prefix_probe(self, tokens) -> int:
+        """Longest cached-prefix length this engine could reuse for
+        ``tokens`` right now (0 without a prefix cache). Read-only — the
+        router scores every replica with this before dispatching."""
+        if self.prefix is None:
+            return 0
+        with self._lock:
+            return self.prefix.probe(tokens)
+
     def warmup(self) -> float:
         """Compile (and run once, results discarded) every executable the
         queued requests will need; the elapsed time lands in

@@ -171,6 +171,32 @@ class PrefixCache:
                            mass=best.snap_mass, spectra=best.snap_spectra,
                            nodes=path)
 
+    def probe(self, tokens: np.ndarray) -> int:
+        """Longest *snapshotted* reusable prefix length for ``tokens`` —
+        the same depth a :meth:`match` at this instant would reuse — as a
+        pure read: no page assembly, no LRU movement, no refcounts.
+
+        This is the router's affinity score (repro.serve.frontend): a
+        prompt is dispatched to the replica whose tree already holds its
+        longest prefix, so the probe must be cheap enough to run against
+        every replica per submit and side-effect-free so losing replicas
+        keep their LRU order untouched."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        P = len(tokens)
+        node, i, best = self.root, 0, 0
+        while i < P:
+            child = node.children.get(int(tokens[i]))
+            if child is None:
+                break
+            e = len(child.tokens)
+            if e > P - i or not np.array_equal(child.tokens, tokens[i:i + e]):
+                break
+            node = child
+            i += e
+            if child.snap_ok and child.end <= P - 1:
+                best = child.end
+        return best
+
     # -- insertion -------------------------------------------------------
 
     def _split(self, node: RadixNode, j: int) -> None:

@@ -151,6 +151,20 @@ class Scheduler:
             placed.append((slot, req, bucket_for(len(req.tokens), self.buckets)))
         return placed
 
+    def cancel_pending(self, rid: int) -> bool:
+        """Drop a not-yet-admitted request from the queue. Returns True
+        if it was found (and removed); an admitted request is the
+        engine's to cancel — its slot and pages must be released too."""
+        for i, req in enumerate(self.pending):
+            if req.rid == rid:
+                del self.pending[i]
+                return True
+        return False
+
+    def depth(self) -> int:
+        """Requests in the system: queued + admitted (live slots)."""
+        return len(self.pending) + self.n_live()
+
     # -- eviction --------------------------------------------------------
 
     def should_evict(self, slot: int) -> bool:

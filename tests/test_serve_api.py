@@ -16,6 +16,9 @@ from repro.models.api import get_model
 from repro.serve import Engine, EngineConfig, SamplingParams
 from repro.serve.scheduler import Request
 
+
+pytestmark = pytest.mark.serve
+
 RNG = jax.random.PRNGKey(0)
 
 

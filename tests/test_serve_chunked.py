@@ -24,6 +24,9 @@ from repro.configs.base import RankConfig
 from repro.models.api import get_model
 from repro.serve import Request, ServeEngine
 
+
+pytestmark = pytest.mark.serve
+
 RNG = jax.random.PRNGKey(0)
 
 

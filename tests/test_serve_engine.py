@@ -12,6 +12,7 @@ Covers the three layers separately and end-to-end:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -20,6 +21,9 @@ from repro.models.api import get_model
 from repro.serve import PagedKVCache, Request, Scheduler, ServeEngine
 from repro.serve.kv_cache import gather_views
 from repro.serve.scheduler import bucket_for, prefill_buckets
+
+
+pytestmark = pytest.mark.serve
 
 RNG = jax.random.PRNGKey(0)
 

@@ -15,6 +15,7 @@ Covers the fixes of the serve data-plane rework:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.base import RankConfig
@@ -24,6 +25,9 @@ from repro.models.lowrank_cache import attention_mass
 from repro.serve import PagedKVCache, Request, ServeEngine
 from repro.serve.policy import make_decide_fn
 from repro.serve.scheduler import bucket_for, prefill_buckets
+
+
+pytestmark = pytest.mark.serve
 
 RNG = jax.random.PRNGKey(0)
 

@@ -26,6 +26,9 @@ from repro.models.api import get_model
 from repro.serve import PagedKVCache, PrefixCache, Request, ServeEngine
 from repro.serve.api import Engine, EngineConfig, SamplingParams
 
+
+pytestmark = pytest.mark.serve
+
 RNG = jax.random.PRNGKey(0)
 
 
