@@ -57,6 +57,17 @@ CHECKS = [
      "K-cache bytes/token, factored vs dense (r_keep/dh, deterministic)"),
     ("router.hit_rate_gain", "min_abs", 0.10,
      "affinity hit-rate minus round-robin (must stay decisively positive)"),
+    ("speculative.parity", "flag", None,
+     "speculative decode is token-identical to plain decode"),
+    ("speculative.accept_rate", "min_abs", 0.6,
+     "quarter-rank draft accept rate (deterministic given model/workload)"),
+    ("speculative.mean_accept_len", "min_abs", 1.3,
+     "tokens per fused dispatch (plain decode is exactly 1.0; this is "
+     "the speedup factor wherever per-step cost dominates)"),
+    ("speculative.tok_per_s_ratio", "info", None,
+     "speculative vs plain tok/s (toy-scale CPU wall-clock: the drafts' "
+     "rank cut saves attention reads, which are negligible here — "
+     "report, don't gate)"),
     ("router.tok_per_s_ratio_vs_single", "info", None,
      "2-replica aggregate vs 1 replica (wall-clock: report, don't gate)"),
     ("engine.tok_per_s", "info", None,

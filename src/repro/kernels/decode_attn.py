@@ -24,7 +24,16 @@ q_start = kv_len-1) and mid-prefill rows (C = chunk size) side by side.
 Rows whose chunk is shorter than C pad with garbage queries whose outputs
 the engine discards; the ``kv_len`` mask caps what they can see, and a
 fully-masked query row contributes exact zeros (not exp(0) garbage) to
-its own accumulator.
+its own accumulator. An optional per-row ``q_lens`` tightens that
+contract: queries at index >= q_lens[b] are fully masked, so their output
+and probability rows come out exactly zero rather than echoing the last
+valid query's window.
+
+**Speculative decode** (repro.serve.spec) reuses both chunk forms: the
+draft phase runs the C=1 shape over a statically narrowed factor slice
+(r_cap columns of kt = K . B_r — the aggressive draft rank), and the
+verify phase is exactly the chunked-prefill shape: one (C, M) causal
+block per row scores a row's whole draft run in a single pass.
 
 ``return_probs=True`` additionally emits the normalised attention rows
 p (b, hq, C, M): the serving engine accumulates per-key attention mass
@@ -46,8 +55,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref, *rest,
-                   scale: float, block_k: int, hq: int, return_probs: bool):
+def _decode_kernel(len_ref, qstart_ref, qlen_ref, q_ref, k_ref, v_ref,
+                   o_ref, *rest, scale: float, block_k: int, hq: int,
+                   return_probs: bool):
     if return_probs:
         p_ref, m_scr, l_scr, acc_scr, p_scr = rest
     else:
@@ -58,6 +68,7 @@ def _decode_kernel(len_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref, *rest,
     row = pl.program_id(0) // hq
     kv_len = len_ref[row]
     q_start = qstart_ref[row]
+    q_len = qlen_ref[row]
 
     @pl.when(ki == 0)
     def _init():
@@ -76,8 +87,10 @@ def _decode_kernel(len_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref, *rest,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        s = jnp.where((k_pos <= q_pos) & (k_pos < kv_len), s, NEG_INF)
+        q_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        q_pos = q_start + q_idx
+        s = jnp.where((k_pos <= q_pos) & (k_pos < kv_len) & (q_idx < q_len),
+                      s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         # a chunk query whose causal window hasn't reached this block yet
@@ -108,15 +121,17 @@ def _decode_kernel(len_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref, *rest,
                                     "return_probs"))
 def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
                  interpret: bool = False, return_probs: bool = False,
-                 q_start=None):
+                 q_start=None, q_lens=None):
     """q: (b, hq, r) single decode token, or (b, hq, C, r) per-row query
     chunk; k: (b, hkv, M, r); v: (b, hkv, M, dv); kv_len: () or (b,) valid
     keys INCLUDING the new chunk. ``q_start``: () or (b,) cache position of
     each row's first query (default ``kv_len - C``: the chunk sits at the
     end of the valid prefix — for C=1 that is the classic decode mask
-    ``k_pos < kv_len``). Returns (b, hq, dv) / (b, hq, C, dv), with the
-    normalised probability rows (b, hq, [C,] M) appended when
-    ``return_probs``."""
+    ``k_pos < kv_len``). ``q_lens``: optional (b,) valid query count per
+    row; queries at index >= q_lens[b] are fully masked and their output /
+    probability rows are exact zeros (default: all C valid). Returns
+    (b, hq, dv) / (b, hq, C, dv), with the normalised probability rows
+    (b, hq, [C,] M) appended when ``return_probs``."""
     squeeze = q.ndim == 3
     if squeeze:
         q = q[:, :, None, :]
@@ -136,6 +151,8 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
     lens = jnp.broadcast_to(jnp.reshape(kv_len, (-1,)), (b,)).astype(jnp.int32)
     qs = (lens - C if q_start is None else
           jnp.broadcast_to(jnp.reshape(q_start, (-1,)), (b,)).astype(jnp.int32))
+    ql = (jnp.full((b,), C, jnp.int32) if q_lens is None else
+          jnp.broadcast_to(jnp.reshape(q_lens, (-1,)), (b,)).astype(jnp.int32))
 
     grid = (b * hq, M_p // block_k)
     kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
@@ -157,6 +174,7 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, C, r), lambda bh, ki: (bh, 0, 0)),
             pl.BlockSpec((1, block_k, r),
                          lambda bh, ki, n_rep=n_rep: (bh // n_rep, ki, 0)),
@@ -167,7 +185,7 @@ def flash_decode(q, k, v, kv_len, *, scale: float, block_k: int = 512,
         out_shape=out_shape if return_probs else out_shape[0],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(lens, qs, qf, kf, vf)
+    )(lens, qs, ql, qf, kf, vf)
     if return_probs:
         o, p = res
         o = o.reshape(b, hq, C, dv)

@@ -30,16 +30,18 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 
 def decode_attention(q, k, v, kv_len, *, scale: float, block_k: int = 512,
                      interpret=None, return_probs: bool = False,
-                     q_start=None):
+                     q_start=None, q_lens=None):
     """Flash-decode; kv_len may be () or per-row (b,). ``q`` is (b, hq, r)
     for one decode token or (b, hq, C, r) for a per-row chunk of C query
-    tokens (chunked prefill interleaved into the fused serve step) with
-    ``q_start`` the per-row cache position of the first query.
-    ``return_probs`` also returns the normalised attention rows
-    (b, hq, [C,] M) for the serving engine's attention-mass accumulator.
+    tokens (chunked prefill interleaved into the fused serve step, or a
+    speculative verify block) with ``q_start`` the per-row cache position
+    of the first query and ``q_lens`` the optional per-row valid query
+    count (padding queries come out exactly zero). ``return_probs`` also
+    returns the normalised attention rows (b, hq, [C,] M) for the serving
+    engine's attention-mass accumulator.
     See repro.kernels.ref.decode_ref / decode_chunk_ref."""
     if interpret is None:
         interpret = _on_cpu()
     return flash_decode(q, k, v, kv_len, scale=scale, block_k=block_k,
                         interpret=interpret, return_probs=return_probs,
-                        q_start=q_start)
+                        q_start=q_start, q_lens=q_lens)

@@ -298,7 +298,9 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                       tokens, *, slot_lens, slot_ranks=None, basis=None,
                       active=None, use_kernel: bool = False,
                       kt_pool=None, mass_pool=None,
-                      q_lens=None, prefill_rows=None):
+                      q_lens=None, prefill_rows=None,
+                      return_all_logits: bool = False,
+                      mass_defer: bool = False):
     """One fused decode step over every serving slot of a slot-paged cache
     (repro.serve): heterogeneous streams share ONE executable.
 
@@ -359,6 +361,17 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     mass; a prefix-hit slot's matched region is instead re-seeded from
     the tree snapshot at admission and only ever added to here.
 
+    **Speculative verify** (repro.serve.spec): ``return_all_logits`` keeps
+    every query's logits — (n_slots, C, V) instead of the last valid
+    query's — so one chunked step can score a row's whole draft run.
+    ``mass_defer`` replaces the in-graph mass accumulate with per-query
+    contributions returned under pools["mass_q"] (L, n_slots, C, M, hkv):
+    the caller applies only the accepted prefix's queries after the
+    accept length is known, so rejected drafts never pollute the
+    weighted-Gram state feeding the next segment decision (Eq. 9 veto
+    must see accepted tokens only). Causality makes the deferred sum of
+    accepted queries bitwise equal to the sequential one-token updates.
+
     Returns (logits (n_slots, 1, V), pools) with pools a dict holding the
     updated ``k``/``v`` pools plus ``kt``/``mass`` when those were given.
     """
@@ -370,6 +383,11 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
         raise ValueError("slot_ranks and basis must be given together")
     if (kt_pool is not None or mass_pool is not None) and slot_ranks is None:
         raise ValueError("kt_pool/mass_pool require the rank path")
+    if mass_defer and slot_ranks is None:
+        raise ValueError("mass_defer requires the rank path")
+    if mass_defer and mass_pool is not None:
+        raise ValueError("mass_defer and mass_pool are mutually exclusive: "
+                         "deferred contributions are applied by the caller")
     dtype = nn.dt(cfg.dtype)
     x = params["embed"][tokens].astype(dtype)
     ns, C = tokens.shape
@@ -486,6 +504,7 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                 k_use = jnp.where(is_pf[:, None, None, None], k_dense,
                                   jnp.pad(k_fac, pad))
         probs = None
+        want_probs = (mp is not None) or mass_defer
         if use_kernel:
             from repro.kernels.ops import decode_attention
             qk = jnp.swapaxes(q_use, 1, 2)               # (ns, hq, C, r)
@@ -494,8 +513,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                 jnp.swapaxes(k_use, 1, 2),               # (ns, hkv, M, r)
                 jnp.swapaxes(vg, 1, 2),                  # (ns, hkv, M, dh)
                 kv_end, scale=scale, q_start=slot_lens,
-                return_probs=mp is not None)
-            if mp is not None:
+                return_probs=want_probs)
+            if want_probs:
                 o, probs = res                       # probs (ns, hq, [C,] M)
             else:
                 o = res
@@ -508,8 +527,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
                          scale=scale, causal=False,
                          kv_len=kv_len_q[:, None, :, None],
                          score_dtype=score_dtype,
-                         return_probs=mp is not None)
-            if mp is not None:
+                         return_probs=want_probs)
+            if want_probs:
                 o, probs = res                           # probs (ns, hq, C, M)
             else:
                 o = res
@@ -527,6 +546,15 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
             w_tok = kv_group_mean(w, hkv)                    # (ns, hkv, M)
             mp = (jnp.where(new_cell[:, :, None], 0.0, mp)
                   + jnp.swapaxes(w_tok, 1, 2).astype(mp.dtype))
+        mass_q = None
+        if mass_defer:
+            # per-query mass, NOT summed over the chunk: the caller masks
+            # to the accepted queries before applying (spec verify)
+            from repro.models.common import kv_group_mean
+            wq = (probs.astype(jnp.float32)
+                  * write_ok[:, None, :, None])              # (ns, hq, C, M)
+            wq = kv_group_mean(jnp.swapaxes(wq, 1, 2), hkv)  # (ns, C, hkv, M)
+            mass_q = jnp.swapaxes(wq, 2, 3)                  # (ns, C, M, hkv)
         x = x + jnp.einsum("bshf,hfd->bsd", o,
                            p["wo"].reshape(hq, dh, d).astype(x.dtype))
         if cfg.family == "moe" and cfg.moe is not None and "moe" in lp:
@@ -541,6 +569,8 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
             new_extra["kt"] = ktp
         if mp is not None:
             new_extra["mass"] = mp
+        if mass_q is not None:
+            new_extra["mass_q"] = mass_q
         return x + f, (kp, vp, new_extra)
 
     from repro.models.common import scan_or_unroll
@@ -554,7 +584,7 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, page_table,
     x, (nk, nv, n_extra) = scan_or_unroll(
         body, x, (params["layers"], pool_k, pool_v, basis_xs, extra_xs),
         unroll=not cfg.scan_layers)
-    if C > 1:
+    if C > 1 and not return_all_logits:
         # only each row's last valid query feeds the LM head: the next
         # token for decode rows, token 0 for a row finishing its prompt
         x = jnp.take_along_axis(x, (q_lens - 1)[:, None, None], axis=1)

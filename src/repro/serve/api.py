@@ -93,7 +93,16 @@ class EngineConfig:
     parity with cold admission is preserved. Requires chunked prefill;
     run ``prefill_chunk`` as a multiple of ``page_size`` for a reuse
     point at every page. ``prefix_pages`` sizes the extra pool headroom
-    kept for cached prefixes (default: one extra slot-set of pages)."""
+    kept for cached prefixes (default: one extra slot-set of pages).
+    ``speculative=True`` turns on low-rank self-speculative decoding
+    (``repro.serve.spec``): each fused step drafts ``draft_k`` tokens
+    ahead reading the factor cache at roughly ``draft_rank_frac`` of
+    each row's live rank, verifies all of them in one chunked step at
+    the full current rank, and accepts the longest matching prefix —
+    token-identical to plain decode (greedy and seeded sampling), only
+    faster. Requires chunked prefill. ``snapshot_every`` throttles
+    prefix-cache mass snapshots to every k-th page boundary (probe /
+    match fall back to the nearest earlier snapshot)."""
     n_slots: int = 4
     max_len: int = 256
     page_size: int = 16
@@ -110,6 +119,10 @@ class EngineConfig:
     nucleus: bool = False
     top_k_cap: int = 64
     buckets: Optional[Sequence[int]] = None
+    speculative: bool = False
+    draft_k: int = 4
+    draft_rank_frac: float = 0.25
+    snapshot_every: int = 1
 
     def __post_init__(self):
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
@@ -120,6 +133,17 @@ class EngineConfig:
         if self.prefix_cache and self.prefill_chunk is None:
             raise ValueError("prefix_cache requires chunked prefill "
                              "(set prefill_chunk)")
+        if self.speculative and self.prefill_chunk is None:
+            raise ValueError("speculative decode requires chunked prefill "
+                             "(set prefill_chunk)")
+        if self.speculative and self.draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {self.draft_k}")
+        if not 0.0 < self.draft_rank_frac <= 1.0:
+            raise ValueError(f"draft_rank_frac must be in (0, 1], got "
+                             f"{self.draft_rank_frac}")
+        if self.snapshot_every < 1:
+            raise ValueError(f"snapshot_every must be >= 1, got "
+                             f"{self.snapshot_every}")
 
 
 class EngineStopped(RuntimeError):
@@ -315,7 +339,10 @@ class Engine:
             time_per_token=c.time_per_token, factor_cache=c.factor_cache,
             prefill_chunk=c.prefill_chunk, sampling=c.sampling,
             nucleus=c.nucleus, top_k_cap=c.top_k_cap,
-            prefix_cache=c.prefix_cache, prefix_pages=c.prefix_pages)
+            prefix_cache=c.prefix_cache, prefix_pages=c.prefix_pages,
+            speculative=c.speculative, draft_k=c.draft_k,
+            draft_rank_frac=c.draft_rank_frac,
+            snapshot_every=c.snapshot_every)
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._finished_seen = 0
@@ -529,6 +556,14 @@ class Engine:
         """Longest cached-prefix length this engine could reuse for
         ``prompt`` right now (0 without a prefix cache); read-only."""
         return self.core.prefix_probe(prompt)
+
+    def accept_lens(self) -> Dict[int, List[int]]:
+        """Per-request speculative accept-run lengths: rid -> list of
+        accepted tokens per fused step (1 = all drafts rejected,
+        draft_k + 1 = all survived). Finished or cancelled requests only;
+        empty on a non-speculative engine."""
+        return {rid: list(v)
+                for rid, v in self.core.request_accept_lens.items()}
 
     def ttft(self) -> Dict[int, float]:
         """Per-request submit()->first-token wall seconds (finished or

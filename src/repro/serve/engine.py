@@ -71,7 +71,10 @@ class ServeEngine:
                  sampling: bool = False, nucleus: bool = False,
                  top_k_cap: int = 64,
                  prefix_cache: bool = False,
-                 prefix_pages: Optional[int] = None):
+                 prefix_pages: Optional[int] = None,
+                 speculative: bool = False, draft_k: int = 4,
+                 draft_rank_frac: float = 0.25,
+                 snapshot_every: int = 1):
         self.cfg, self.params, self.policy = cfg, params, policy_params
         self.seg = int(segment_len or cfg.rank.segment_len)
         self.n_slots = n_slots
@@ -87,6 +90,28 @@ class ServeEngine:
             # pauses; the one-shot path has no such cut points
             raise ValueError("prefix_cache requires chunked prefill "
                              "(prefill_chunk is None)")
+        # speculative self-drafting (repro.serve.spec): draft_k cheap
+        # low-rank tokens per fused step, verified in one chunked block.
+        # The verify pass IS the chunked-query step, so chunked prefill
+        # is required; the step's chunk width covers both the prefill
+        # chunk and the draft run.
+        self.speculative = bool(speculative)
+        self.draft_k = int(draft_k)
+        self.draft_rank_frac = float(draft_rank_frac)
+        self.snapshot_every = int(snapshot_every)
+        if self.speculative and self.chunk is None:
+            raise ValueError("speculative decode requires chunked prefill "
+                             "(the verify pass is the chunked-query step)")
+        if self.speculative and self.draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+        if not 0.0 < self.draft_rank_frac <= 1.0:
+            raise ValueError(f"draft_rank_frac must be in (0, 1], got "
+                             f"{draft_rank_frac}")
+        if self.snapshot_every < 1:
+            raise ValueError(f"snapshot_every must be >= 1, got "
+                             f"{snapshot_every}")
+        self.spec_chunk = (max(self.chunk, self.draft_k + 1)
+                           if self.speculative else None)
         # sampling=True compiles the temperature/top-k/gumbel tail into the
         # fused step (static flag: greedy-only engines keep the plain
         # argmax executable). Greedy rows (temperature 0) stay bitwise
@@ -113,6 +138,14 @@ class ServeEngine:
         self.cache = PagedKVCache(cfg, n_slots, max_len, page_size,
                                   n_pages=self._n_pages,
                                   factored=factor_cache)
+        # static draft width: the basis / kt pool are sliced to r_cap
+        # columns for the draft forwards (a real byte cut); per-row draft
+        # ranks (policy.draft_ranks) stay within [grid floor, r_cap]
+        self._draft_cap = None
+        if self.speculative and self.cache.rank_on:
+            g_lo = int(cfg.rank.rank_grid[0])
+            want = int(np.ceil(self.cache.r_keep * self.draft_rank_frac))
+            self._draft_cap = min(max(g_lo, want, 1), self.cache.r_keep)
         self.prefix = PrefixCache(self.cache) if prefix_cache else None
         # submit() and admission (scheduler pop + device staging) may run
         # on different threads; one lock covers both critical sections
@@ -137,6 +170,9 @@ class ServeEngine:
         self._step_mixed = (jax.jit(self._step_mixed_impl,
                                     donate_argnums=donate)
                             if self.chunk is not None else None)
+        self._step_spec = (jax.jit(self._step_spec_impl,
+                                   donate_argnums=donate)
+                           if self.speculative else None)
         # token-0 selection for one-shot admission: the same in-graph
         # sampling math the fused step applies, on the prefill's last
         # prompt logits — a sampled stream draws identically whether its
@@ -171,6 +207,7 @@ class ServeEngine:
         self._seed = np.zeros((ns,), np.uint32)
         self._temp_dev = self._topk_dev = self._topp_dev = None
         self._seed_dev = None
+        self._eos_dev = None
         self.prompt_buf = (jnp.zeros((ns, self.cache.max_len), jnp.int32)
                            if self.chunk is not None else None)
         # prefix-cache bookkeeping: the hit looked up at allocation time
@@ -186,7 +223,12 @@ class ServeEngine:
                       "decides": 0, "mixed_steps": 0, "stall_s": 0.0,
                       "prefill_tokens": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "prefix_reused_tokens": 0,
-                      "prefix_cow": 0, "prefix_evictions": 0}
+                      "prefix_cow": 0, "prefix_evictions": 0,
+                      "spec_steps": 0, "spec_drafted": 0,
+                      "spec_accepted": 0, "spec_tokens": 0}
+        # rid -> accepted run length of every speculative step the
+        # request decoded in (harvested at eviction/cancel)
+        self.request_accept_lens: Dict[int, List[int]] = {}
         self.rank_history: List[Tuple[int, jnp.ndarray, np.ndarray]] = []
         # harvested at eviction: decode-step wall time per token (needs
         # time_per_token=True) and first-token (prefill) latency per request
@@ -267,6 +309,8 @@ class ServeEngine:
             for i, st in enumerate(self.sched.slots):
                 if st.active and st.req.rid == rid:
                     outputs = np.asarray(self.out_buf[i, :st.n_out]).tolist()
+                    if st.accept_lens:
+                        self.request_accept_lens[rid] = list(st.accept_lens)
                     self.sched.evict(i, self.cache.release, outputs)
                     # a mid-prefill cancel leaves no prefix insertion and
                     # no pending spectra capture for this slot
@@ -321,6 +365,40 @@ class ServeEngine:
             jax.block_until_ready(self.cache.basis)
         # all-lanes-inactive step: writes land on the scratch page / row,
         # so re-capturing the donated pools and out_buf is value-neutral
+        if self.speculative:
+            # the pure-prefill phase routes through the mixed step (see
+            # step()); the plain decode step is never dispatched
+            pools, tok, ob, _ = self._step_mixed(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                self.cache.kt_pool, self.cache.mass_pool,
+                self._pt_dev, self.tokens, self._lens_dev,
+                self.cache.ranks, self.cache.basis,
+                jnp.zeros((ns,), bool), self.out_buf,
+                self._plen_dev, self._temp_dev, self._topk_dev,
+                self._topp_dev, self._seed_dev, self.prompt_buf)
+            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
+            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self.out_buf = ob
+            jax.block_until_ready(tok)
+            pools, tok, ob, _, _, _, _ = self._step_spec(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                self.cache.kt_pool, self.cache.mass_pool,
+                self._pt_dev, self.tokens, self._lens_dev,
+                self.cache.ranks, self.cache.basis,
+                jnp.zeros((ns,), bool), self.out_buf,
+                self._plen_dev, self._temp_dev, self._topk_dev,
+                self._topp_dev, self._seed_dev, self.prompt_buf,
+                self.cache.spectra, jnp.ones((ns,), jnp.int32),
+                jnp.full((ns,), -1, jnp.int32))
+            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
+            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self.out_buf = ob
+            jax.block_until_ready(tok)
+            dt = time.perf_counter() - t0
+            self.stats["compile_s"] += dt
+            return dt
         runs = [(self._step, ())] + (
             [(self._step_mixed, (self.prompt_buf,))]
             if self._step_mixed is not None else [])
@@ -464,6 +542,134 @@ class ServeEngine:
         out_buf = out_buf.at[row, out_idx].set(tok[:, 0])
         return pools, tok, out_buf, lens_after
 
+    def _step_spec_impl(self, params, pool_k, pool_v, kt_pool, mass_pool,
+                        page_table, tokens, lens, ranks, basis, active,
+                        out_buf, prompt_lens, temps, topks, topps, seeds,
+                        prompt_buf, spectra, caps, eos_ids):
+        """One fused speculative step (repro.serve.spec): ``draft_k``
+        single-token forwards at an aggressive per-row draft rank over a
+        statically narrowed basis / factor slice, then ONE chunked verify
+        block per row at the slot's current rank, longest-prefix accept
+        with EOS / budget / segment-boundary clamps, and an in-graph
+        logical rollback — ``lens`` advances past accepted tokens only;
+        rejected positions are masked garbage the next step overwrites.
+        Mid-prefill rows ride along exactly as in the mixed step. Deferred
+        per-query mass contributions are applied for accepted queries
+        only, in query order (bitwise the sequential accumulation).
+
+        Returns (pools, tok, out_buf, lens_after, accepts, n_emit,
+        emitted): ``accepts`` (ns,) the accepted run length per
+        speculative row (0 elsewhere), ``n_emit`` (ns,) tokens emitted
+        per row this step, ``emitted`` (ns, draft_k + 1) their values
+        (col 0 = token 0 for a row finishing its prompt)."""
+        from repro.serve import spec as spec_mod
+        from repro.serve.policy import draft_ranks
+        ns = tokens.shape[0]
+        off = self.cfg.rank.mode == "off"
+        k_d = self.draft_k
+        Cd = k_d + 1
+        C = self.spec_chunk
+        cap = self.max_new_cap
+        is_pf = active & (lens < prompt_lens)
+        spec_rows = active & ~is_pf
+        base_out = jnp.clip(lens - prompt_lens + 1, 0, cap - 1)
+
+        # -- draft: k_d cheap forwards. Draft K/V writes land in the live
+        # pages — every one of them sits in the verify block's write range
+        # [lens, lens + Cd) and is overwritten there with authoritative
+        # values. Draft factor appends go into the sliced transient copy
+        # (discarded); the mass pool is never touched by drafts, so the
+        # Eq. 9 veto state only ever sees accepted tokens.
+        if off:
+            d_ranks = d_basis = d_kt = None
+        else:
+            d_ranks = draft_ranks(ranks, spectra,
+                                  frac=self.draft_rank_frac,
+                                  grid_lo=int(self.cfg.rank.rank_grid[0]),
+                                  r_cap=self._draft_cap)
+            d_basis = basis[..., :self._draft_cap]
+            d_kt = (None if kt_pool is None
+                    else kt_pool[..., :self._draft_cap])
+        pk, pv = pool_k, pool_v
+        d_tok = tokens
+        drafts = []
+        for i in range(k_d):
+            dlg, dpools = self.fns.decode_step_paged(
+                params, pk, pv, page_table, d_tok,
+                slot_lens=lens + i, slot_ranks=d_ranks, basis=d_basis,
+                active=spec_rows, use_kernel=self.use_kernel,
+                kt_pool=d_kt, mass_pool=None)
+            pk, pv = dpools["k"], dpools["v"]
+            d_kt = dpools.get("kt", d_kt)
+            opos = jnp.minimum(base_out + i, cap - 1)
+            d_tok = self._select_token(dlg[:, 0], opos,
+                                       temps, topks, topps, seeds)[:, None]
+            drafts.append(d_tok[:, 0])
+        drafts = jnp.stack(drafts, axis=1)                   # (ns, k_d)
+
+        # -- verify: one causal chunk [t_0, d_1..d_k] per speculative row
+        # (the next prompt chunk for mid-prefill rows) at the slot's
+        # CURRENT rank — the same read plain decode would have done, so
+        # every accepted token is exact by construction
+        q_lens = jnp.where(is_pf, jnp.minimum(C, prompt_lens - lens),
+                           Cd).astype(jnp.int32)
+        idx = jnp.clip(lens[:, None] + jnp.arange(C)[None, :], 0,
+                       prompt_buf.shape[1] - 1)
+        chunk_toks = jnp.take_along_axis(prompt_buf, idx, axis=1)
+        spec_toks = jnp.concatenate([tokens, drafts], axis=1)    # (ns, Cd)
+        if C > Cd:
+            spec_toks = jnp.pad(spec_toks, ((0, 0), (0, C - Cd)))
+        toks_in = jnp.where(is_pf[:, None], chunk_toks, spec_toks)
+        defer = (not off) and (mass_pool is not None)
+        logits, pools = self.fns.decode_step_paged(
+            params, pk, pv, page_table, toks_in,
+            slot_lens=lens, q_lens=q_lens, prefill_rows=is_pf,
+            slot_ranks=None if off else ranks,
+            basis=None if off else basis, active=active,
+            use_kernel=self.use_kernel,
+            kt_pool=None if off else kt_pool,
+            mass_pool=None, return_all_logits=True, mass_defer=defer)
+        # target tokens at every position, same (seed, out position) fold
+        # as plain decode — the sampler is deterministic per position, so
+        # "accept while draft == target" reproduces plain decode exactly.
+        # A finishing prefill row emits output index 0 (only its final
+        # query's sample is ever read), matching the mixed step's fold.
+        opos = jnp.where(is_pf[:, None], 0,
+                         jnp.minimum(base_out[:, None]
+                                     + jnp.arange(C)[None, :],
+                                     cap - 1))                   # (ns, C)
+        g = jax.vmap(self._select_token,
+                     in_axes=(1, 1, None, None, None, None),
+                     out_axes=1)(logits, opos, temps, topks, topps, seeds)
+
+        tgt = g[:, :Cd]
+        a = spec_mod.accept_counts(drafts, tgt)
+        a = spec_mod.clamp_to_eos(a, tgt, eos_ids)
+        a = jnp.minimum(a, caps)
+        a = jnp.where(spec_rows, a, 0)
+
+        lens_after = lens + jnp.where(is_pf, q_lens, 0) + a
+        finishing = is_pf & (lens_after >= prompt_lens)
+        n_emit = a + finishing.astype(a.dtype)
+        fin_tok = jnp.take_along_axis(g, (q_lens - 1)[:, None], axis=1)
+        src = jnp.where(finishing[:, None],
+                        jnp.broadcast_to(fin_tok, tgt.shape), tgt)
+        emit_ok = jnp.arange(Cd)[None, :] < n_emit[:, None]
+        rows = jnp.where(emit_ok, jnp.arange(ns)[:, None], ns)
+        col0 = jnp.where(finishing, 0, base_out)
+        cols = jnp.clip(col0[:, None] + jnp.arange(Cd)[None, :], 0, cap - 1)
+        out_buf = out_buf.at[rows, cols].set(src)
+        last = jnp.take_along_axis(
+            src, jnp.clip(n_emit - 1, 0, Cd - 1)[:, None], axis=1)
+        tok = jnp.where(n_emit[:, None] > 0, last, tokens)
+
+        if defer:
+            contrib = pools.pop("mass_q")
+            n_q = jnp.where(spec_rows, a, jnp.where(is_pf, q_lens, 0))
+            pools["mass"] = spec_mod.apply_deferred_mass(
+                mass_pool, contrib, lens, n_q)
+        return pools, tok, out_buf, lens_after, a, n_emit, src
+
     def _sync_control(self) -> None:
         """Push host control state to device after admission/eviction; the
         steady-state decode loop reuses these arrays without any transfer."""
@@ -480,6 +686,10 @@ class ServeEngine:
         self._topk_dev = jnp.asarray(self._topk)
         self._topp_dev = jnp.asarray(self._topp)
         self._seed_dev = jnp.asarray(self._seed)
+        self._eos_dev = jnp.asarray(
+            np.array([s.req.eos_id
+                      if (s.active and s.req.eos_id is not None) else -1
+                      for s in self.sched.slots], np.int32))
         self._dirty = False
 
     def _can_allocate(self, slot: int, total_len: int) -> bool:
@@ -678,6 +888,141 @@ class ServeEngine:
             if self.has_rank[i] and drift[i] > self.drift_threshold:
                 self.force_decide[i] = True
 
+    def _maybe_snapshot(self, i: int, st, done_pf: bool) -> None:
+        """Capture a cumulative-mass snapshot for the prefix cache. The
+        accumulator holds queries [0, prefilled) and nothing more because
+        chunked prefill paused exactly here. ``snapshot_every`` throttles
+        density: only every k-th page boundary is kept (plus the prompt
+        end, which anchors the full-prompt node); prefix probe/match fall
+        back to the nearest earlier snapshot, trading a slightly shorter
+        hit for O(P^2 / (k * ps)) snapshot bytes per prompt."""
+        if self.prefix is None:
+            return
+        ps = self.cache.page_size
+        at_page = st.prefilled % ps == 0
+        kept = at_page and (st.prefilled // ps) % self.snapshot_every == 0
+        if done_pf or kept:
+            self._snaps[i][st.prefilled] = (
+                None if self.cache.mass_pool is None else
+                self.cache.mass_pool[:, i, :st.prefilled])
+
+    def _insert_prefix(self, i: int, st) -> None:
+        """Publish a finished prompt's pages + snapshots to the radix
+        tree; the node waits for its spectra at the next decision."""
+        if self.prefix is None:
+            return
+        n_pg = self.cache.pages_needed(st.prompt_len)
+        node = self.prefix.insert(
+            st.req.tokens,
+            [int(p) for p in self.cache.page_table[i, :n_pg]],
+            self._snaps.pop(i, {}))
+        if node is not None and self._decide is not None:
+            self._spectra_pending[i] = node
+
+    def _step_live_spec(self, live: List[int]) -> None:
+        """Host side of one speculative engine iteration (the fused body
+        is _step_spec_impl). Differs from the plain path in three ways:
+        decode rows advance by their accepted run length ``a`` (1..
+        draft_k + 1) instead of 1; the per-step accept/emission fetch IS
+        the token stream (handles get every accepted token, not just the
+        newest); and the host caps each row's accepts so max_new, and —
+        in adaptive mode — segment boundaries, fire at the exact token
+        counts plain decode would hit (decode_i never skips a multiple of
+        segment_len, so rank decisions see identical clocks)."""
+        slots = self.sched.slots
+        mid = [i for i in live if slots[i].mid_prefill]
+        decoding = [i for i in live if not slots[i].mid_prefill]
+        q_host = {i: min(self.spec_chunk, slots[i].prompt_len
+                         - slots[i].prefilled) for i in mid}
+        t0 = time.perf_counter() if self.time_per_token else None
+        self._maybe_decide()
+        if self.cache.factored and decoding:
+            assert all(self.has_rank[i] for i in decoding), \
+                "factored slot would read unseeded kt pages"
+        if __debug__:
+            for i in decoding:
+                # speculative writes start at lens >= prompt_len, past any
+                # prefix-shared page (the tail page was COWed at
+                # admission) — rollback never rewinds into shared state
+                assert self.cache.lens[i] >= self.cache.shared_floor(i), \
+                    f"slot {i}: speculative write below shared-page floor"
+        self._sync_control()
+        active_dec = np.array([s.active and not s.mid_prefill
+                               for s in self.sched.slots])
+        self.rank_history.append(
+            (self.stats["steps"], self.cache.ranks, active_dec))
+        caps = np.ones((self.n_slots,), np.int32)
+        for i in decoding:
+            st = slots[i]
+            c = min(self.draft_k + 1, st.req.max_new - st.n_out)
+            if self._decide is not None:
+                c = min(c, self.seg - st.decode_i % self.seg)
+            caps[i] = max(c, 1)
+        pools, tok, ob, lens, acc, n_emit, emitted = self._step_spec(
+            self.params, self.cache.k_pool, self.cache.v_pool,
+            self.cache.kt_pool, self.cache.mass_pool,
+            self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
+            self.cache.basis, self._active_dev, self.out_buf,
+            self._plen_dev, self._temp_dev, self._topk_dev,
+            self._topp_dev, self._seed_dev, self.prompt_buf,
+            self.cache.spectra, jnp.asarray(caps), self._eos_dev)
+        self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+        self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
+        self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+        self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
+        # the accept fetch doubles as the emission sync: streaming handles
+        # need every accepted token this step anyway, so this is the same
+        # one-host-sync-per-step budget as the plain path's tok fetch
+        acc_h, emit_h = jax.device_get((acc, emitted))
+        dt = (time.perf_counter() - t0) if self.time_per_token else None
+        now_t = time.perf_counter()
+        for i in live:
+            st = slots[i]
+            if i in q_host:                       # mid-prefill row
+                q = q_host[i]
+                st.prefilled += q
+                self.cache.lens[i] += q           # host mirror of _lens_dev
+                done_pf = st.prefilled == st.prompt_len
+                self._maybe_snapshot(i, st, done_pf)
+                if done_pf:
+                    st.n_out = 1                  # token 0 emitted this step
+                    st.latencies.append(now_t - st.admit_s)   # TTFT
+                    self.stats["prefills"] += 1
+                    self.request_first_tok_t[st.req.rid] = now_t
+                    st.last_tok = int(emit_h[i, 0])
+                    self.last_emitted.append(
+                        (st.req.rid, 0, int(emit_h[i, 0])))
+                    self._insert_prefix(i, st)
+                continue
+            a = int(acc_h[i])
+            base = st.n_out
+            st.decode_i += a
+            st.n_out += a
+            self.cache.lens[i] += a               # host mirror of _lens_dev
+            st.accept_lens.append(a)
+            st.last_tok = int(emit_h[i, a - 1])
+            self.last_emitted.extend(
+                (st.req.rid, base + t, int(emit_h[i, t])) for t in range(a))
+            if dt is not None:
+                st.latencies.extend([dt / a] * a)
+        self.stats["steps"] += 1
+        if decoding:
+            self.stats["spec_steps"] += 1
+            tot = sum(int(acc_h[i]) for i in decoding)
+            self.stats["tokens_decoded"] += tot
+            self.stats["spec_tokens"] += tot
+            self.stats["spec_accepted"] += sum(
+                int(acc_h[i]) - 1 for i in decoding)
+            # drafts that COULD be accepted this step (caps clamp near
+            # max_new / segment boundaries) — keeps the rate unbiased
+            self.stats["spec_drafted"] += sum(
+                min(self.draft_k, int(caps[i]) - 1) for i in decoding)
+        if mid:
+            self.stats["mixed_steps"] += 1
+        if self._drift is not None and decoding:
+            self._check_drift(decoding)
+        self._evict_finished()
+
     def _evict_finished(self) -> None:
         for i, st in enumerate(self.sched.slots):
             if st.active and self.sched.should_evict(i):
@@ -685,6 +1030,8 @@ class ServeEngine:
                 if st.latencies:
                     self.first_token_s.append(st.latencies[0])
                     self.token_latencies.extend(st.latencies[1:])
+                if st.accept_lens:
+                    self.request_accept_lens[st.req.rid] = list(st.accept_lens)
                 self.sched.evict(i, self.cache.release, outputs)
                 self._dirty = True
 
@@ -694,6 +1041,13 @@ class ServeEngine:
         self._admit()                             # may emit tok0 (one-shot)
         self._evict_finished()                    # max_new == 1 / instant EOS
         live = [i for i, s in enumerate(self.sched.slots) if s.active]
+        if live and self.speculative and any(
+                not self.sched.slots[i].mid_prefill for i in live):
+            # at least one row has a token to extend; pure-prefill steps
+            # fall through to the mixed step instead — drafting there
+            # would run draft_k dead forwards per step for nothing
+            self._step_live_spec(live)
+            live = []
         if live:
             slots = self.sched.slots
             mid = [i for i in live if slots[i].mid_prefill]
@@ -751,16 +1105,7 @@ class ServeEngine:
                     st.prefilled += q
                     self.cache.lens[i] += q       # host mirror of _lens_dev
                     done_pf = st.prefilled == st.prompt_len
-                    if (self.prefix is not None
-                            and (done_pf
-                                 or st.prefilled % self.cache.page_size
-                                 == 0)):
-                        # exact cumulative-mass snapshot: the accumulator
-                        # holds queries [0, prefilled) and nothing more,
-                        # because chunked prefill paused exactly here
-                        self._snaps[i][st.prefilled] = (
-                            None if self.cache.mass_pool is None else
-                            self.cache.mass_pool[:, i, :st.prefilled])
+                    self._maybe_snapshot(i, st, done_pf)
                     if done_pf:
                         st.n_out = 1              # token 0 emitted this step
                         st.latencies.append(now_t - st.admit_s)   # TTFT
@@ -768,15 +1113,7 @@ class ServeEngine:
                         self.request_first_tok_t[st.req.rid] = now_t
                         if tok_host is not None:
                             st.last_tok = int(tok_host[i])
-                        if self.prefix is not None:
-                            n_pg = self.cache.pages_needed(st.prompt_len)
-                            node = self.prefix.insert(
-                                st.req.tokens,
-                                [int(p) for p in
-                                 self.cache.page_table[i, :n_pg]],
-                                self._snaps.pop(i, {}))
-                            if node is not None and self._decide is not None:
-                                self._spectra_pending[i] = node
+                        self._insert_prefix(i, st)
                     continue
                 st.decode_i += 1
                 st.n_out += 1

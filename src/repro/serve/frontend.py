@@ -235,8 +235,10 @@ class FrontEnd:
 
     def stats(self) -> Dict:
         """Live serving stats: queue ``depth``, prefix ``hit_rate``,
-        admission ``stall_s``, decode ``tok_per_s``, plus the raw engine
-        counters under ``"engine"``."""
+        admission ``stall_s``, decode ``tok_per_s``, speculative
+        ``spec_accept_rate`` / ``spec_mean_accept`` (0 on a
+        non-speculative engine), plus the raw engine counters under
+        ``"engine"``."""
         s = dict(self.engine.stats)
         looked = s["prefix_hits"] + s["prefix_misses"]
         return {
@@ -245,6 +247,11 @@ class FrontEnd:
             "stall_s": s["stall_s"],
             "tok_per_s": s["tokens_decoded"] / max(s["decode_s"], 1e-9),
             "tokens_decoded": s["tokens_decoded"],
+            "spec_accept_rate":
+                s["spec_accepted"] / max(s["spec_drafted"], 1),
+            "spec_mean_accept":
+                s["spec_tokens"]
+                / max(s["spec_tokens"] - s["spec_accepted"], 1),
             "alive": self.alive,
             "engine": s,
         }

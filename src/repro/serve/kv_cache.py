@@ -188,6 +188,26 @@ class PagedKVCache:
         self.page_table[slot, :] = 0
         self.lens[slot] = 0
 
+    def shared_floor(self, slot: int) -> int:
+        """First logical position in ``slot`` whose page is private
+        (ref == 1): everything before it lives on pages shared with the
+        prefix tree or another slot and is immutable to this slot.
+
+        This is the rewind floor for speculative decoding: a draft/verify
+        step writes (and a rejection logically rewinds, by not advancing
+        ``lens`` past the accepted prefix) only positions >= this floor.
+        The invariant holds by construction — shared pages are placed
+        strictly before the slot's first written position and a partial
+        shared tail page is COWed at admission — so speculative writes at
+        positions >= lens can never land on a shared page; the engine
+        asserts it per step rather than trusting the construction."""
+        floor = 0
+        for p in self.page_table[slot]:
+            if p == 0 or int(self.ref[p]) <= 1:
+                break
+            floor += self.page_size
+        return floor
+
     def live_pages(self) -> Dict[int, List[int]]:
         """slot -> referenced physical pages (for invariant checks)."""
         return {s: [int(p) for p in row if p != 0]

@@ -194,6 +194,31 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
     return decide
 
 
+def draft_ranks(ranks: jnp.ndarray, spectra: jnp.ndarray, *,
+                frac: float, grid_lo: int, r_cap: int,
+                energy: float = 0.5) -> jnp.ndarray:
+    """Per-slot draft rank for self-speculative decoding: (n_slots,) int32.
+
+    The draft forward reads the factor cache at an aggressive fraction of
+    each slot's current rank (``ceil(frac * rank)``), floor-clamped by the
+    slot's own cached layer-0 spectra: a slot whose spectral mass is NOT
+    concentrated never drafts below the rank that retains ``energy`` of it
+    (head max — conservative), and never below the policy grid's floor
+    ``grid_lo``. ``r_cap`` is the static draft width the engine sliced the
+    basis/factor pools to, so the result is always representable there.
+    Fresh slots with all-zero spectra (no decision yet, or state written
+    directly in tests) degrade to the grid floor. Never exceeds the slot's
+    current rank: the draft is a strictly cheaper read of the same basis.
+    """
+    r_e = lr.rank_for_energy(spectra, energy, 1, r_cap)   # (ns, hkv)
+    has_sig = jnp.any(spectra > 0.0, axis=(1, 2))         # (ns,)
+    floor = jnp.where(has_sig, jnp.max(r_e, axis=1), grid_lo)
+    floor = jnp.clip(floor, grid_lo, r_cap)
+    rd = jnp.ceil(frac * ranks.astype(jnp.float32)).astype(jnp.int32)
+    rd = jnp.maximum(rd, floor.astype(jnp.int32))
+    return jnp.minimum(jnp.minimum(rd, jnp.int32(r_cap)), ranks)
+
+
 def basis_drift(k_tok: jnp.ndarray, basis: jnp.ndarray,
                 ranks: jnp.ndarray) -> jnp.ndarray:
     """Residual energy of the newest K token outside each slot's stored

@@ -71,6 +71,10 @@ class SlotState:
     # wall-clock per-token latencies (filled by the engine when timing)
     latencies: List[float] = field(default_factory=list)
     admit_s: float = 0.0   # perf_counter at admission (TTFT reference)
+    # speculative decode: accepted run length (incl. the free verify
+    # token) of each fused step this stream decoded in — 1 means every
+    # draft was rejected, draft_k + 1 means all survived
+    accept_lens: List[int] = field(default_factory=list)
 
     @property
     def active(self) -> bool:
@@ -148,6 +152,7 @@ class Scheduler:
             st.decode_i, st.t = 0, 0
             st.n_out, st.last_tok = 0, None
             st.latencies = []
+            st.accept_lens = []
             placed.append((slot, req, bucket_for(len(req.tokens), self.buckets)))
         return placed
 

@@ -1,0 +1,110 @@
+"""Low-rank self-speculative decoding: pure in-graph helpers.
+
+The factor cache is a free draft model. Each fused speculative step
+(engine.ServeEngine._step_spec_impl) runs three phases, all inside ONE
+jitted executable:
+
+  1. **Draft**: ``draft_k`` cheap single-token forwards that read the
+     factor pool at an aggressive per-row rank (``draft_ranks`` in
+     serve.policy — ceil(frac * rank), floor-clamped by the slot's cached
+     spectra). The basis / kt pool are *statically* sliced to the draft
+     width r_cap, so the draft's score contraction genuinely reads fewer
+     bytes, not masked-out zeros. Draft K/V writes land in the real pages
+     (the verify pass overwrites every one of them with authoritative
+     values); draft factor appends go into the sliced transient copy and
+     are discarded; the mass pool is untouched.
+  2. **Verify**: ONE chunked-query forward over [t_0, d_1 .. d_k] at the
+     slot's full current rank — exactly the chunked-prefill causal-block
+     shape from decode_step_paged (q_lens = draft_k + 1) with
+     ``return_all_logits`` keeping every query's logits. Target tokens
+     g_0..g_k are drawn with the same (seed, absolute out position) PRNG
+     fold plain decode uses, which makes each target a *deterministic*
+     function of (logits, position): "accept while d_{i+1} == g_i" then
+     reproduces plain decode's token stream exactly, for greedy AND
+     seeded sampling — no rejection-sampling correction needed.
+  3. **Accept / roll back**: ``accept_counts`` takes the longest matching
+     prefix (+1 for the verify step's own bonus token), clamped by EOS,
+     by the remaining max_new budget, and by the distance to the next
+     segment boundary (so adaptive-rank decisions fire at the identical
+     token counts as non-speculative decode). The rollback is purely
+     logical and in-graph: ``lens`` advances only past accepted tokens;
+     K/V/kt rows beyond it are dead weight that the valid-length masks
+     hide and the next step overwrites. Deferred per-query mass
+     contributions (decode_step_paged ``mass_defer``) are applied here
+     for the accepted queries only — Eq. 9 veto state never sees a
+     rejected draft. No page is ever rewound: speculative writes sit at
+     positions >= lens >= the slot's shared-page floor
+     (PagedKVCache.shared_floor), so refcounted prefix pages stay
+     immutable.
+
+Exactness contract: speculation changes *speed only*. Accepted target
+tokens are the verify pass's own samples at the same positions, with the
+same sampler, the same fold, and the same rank state plain decode would
+have used — so greedy and seeded streams are token-identical with
+speculation on or off, across dense/factor caches and kernel/XLA paths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def accept_counts(drafts: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Longest-matching-prefix accept count per row, (ns,) int32 in
+    [1, draft_k + 1].
+
+    drafts: (ns, k) draft tokens d_1..d_k; targets: (ns, >= k + 1) verify
+    samples g_0..g_k at the same output positions. Draft d_{i+1} was
+    proposed for the position g_i verifies, so j = #leading matches of
+    d_{i+1} == g_i, and the step emits a = j + 1 tokens g_0..g_j — the
+    first mismatching position still emits its *target* (the token plain
+    decode would have produced), which is also why a >= 1: even a fully
+    rejected draft run yields the one token a non-speculative step would.
+    """
+    k = drafts.shape[1]
+    match = (drafts == targets[:, :k]).astype(jnp.int32)
+    j = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    return (j + 1).astype(jnp.int32)
+
+
+def clamp_to_eos(a: jnp.ndarray, targets: jnp.ndarray,
+                 eos_ids: jnp.ndarray) -> jnp.ndarray:
+    """Truncate accepted runs at the first EOS target, inclusive.
+
+    Plain decode evicts the step after it emits EOS, so a speculative run
+    must never emit past it. ``eos_ids`` is (ns,) with -1 for requests
+    without an EOS."""
+    iseos = (targets == eos_ids[:, None]) & (eos_ids >= 0)[:, None]
+    first = jnp.argmax(iseos, axis=1).astype(a.dtype)
+    cap = jnp.where(jnp.any(iseos, axis=1), first + 1, targets.shape[1])
+    return jnp.minimum(a, cap)
+
+
+def apply_deferred_mass(mass_pool: jnp.ndarray, contrib: jnp.ndarray,
+                        lens: jnp.ndarray, n_q: jnp.ndarray) -> jnp.ndarray:
+    """Fold the verify pass's deferred per-query mass contributions into
+    the pool, accepted queries only.
+
+    mass_pool: (L, ns, M, hkv); contrib: (L, ns, C, M, hkv) per-query
+    contributions (already zero for dead lanes / padding queries via the
+    forward's write_ok mask); lens: (ns,) pre-step lengths; n_q: (ns,)
+    accepted query count per row (accept count for speculative rows, the
+    consumed chunk length for mid-prefill rows, 0 for dead rows).
+
+    Cells [lens, lens + n_q) are reset before the add (the same
+    append-step reset the in-scan update does), then each accepted
+    query's contribution is added **in query order** — bitwise the same
+    accumulation sequence as n_q sequential single-token steps, so a
+    later segment decision sees identical weighted-Gram input either way.
+    Causality makes the content identical too: query i's softmax row only
+    spans keys plain decode had at its step."""
+    M = mass_pool.shape[2]
+    pos = jnp.arange(M)[None, :]
+    new_cell = (pos >= lens[:, None]) & (pos < (lens + n_q)[:, None])
+    mass = jnp.where(new_cell[None, :, :, None], 0.0, mass_pool)
+    C = contrib.shape[2]
+    q_idx = jnp.arange(C)[None, :]
+    q_ok = (q_idx < n_q[:, None]).astype(mass_pool.dtype)     # (ns, C)
+    for q in range(C):        # static unroll: per-query adds stay ordered
+        mass = mass + (contrib[:, :, q].astype(mass_pool.dtype)
+                       * q_ok[None, :, q, None, None])
+    return mass
