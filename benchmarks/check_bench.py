@@ -37,6 +37,7 @@ def _get(d, path):
 #   "min_ratio" fresh >= band * baseline
 #   "max_ratio" fresh <= band * baseline
 #   "min_abs"   fresh >= band (baseline shown for context only)
+#   "eq_abs"    fresh == band exactly (deterministic counters only)
 #   "info"      reported, never gated (wall-clock on shared runners)
 CHECKS = [
     ("chunked_prefill.parity", "flag", None,
@@ -72,6 +73,18 @@ CHECKS = [
      "2-replica aggregate vs 1 replica (wall-clock: report, don't gate)"),
     ("engine.tok_per_s", "info", None,
      "absolute throughput (runner-speed dependent)"),
+    # runtime sanitizer lane: deterministic counters, gated EXACTLY —
+    # one extra executable in steady state is a latency cliff, not noise
+    ("compile_guard.ok", "flag", None,
+     "transfer-guarded fused steps ran clean (no implicit host sync)"),
+    ("compile_guard.mixed_sampling.steady_new_executables", "eq_abs", 0,
+     "zero new executables across the steady mixed greedy/top-k/top-p run"),
+    ("compile_guard.speculative.steady_new_executables", "eq_abs", 0,
+     "zero new executables across the steady draft/verify + rank-switch run"),
+    ("compile_guard.mixed_sampling.warm_executables", "max_ratio", 1.0,
+     "warmup executable count must not grow past the committed baseline"),
+    ("compile_guard.speculative.warm_executables", "max_ratio", 1.0,
+     "warmup executable count must not grow past the committed baseline"),
 ]
 
 
@@ -89,6 +102,9 @@ def check(fresh: dict, baseline: dict):
         elif kind == "min_abs":
             ok = f >= band
             detail = f">= {band:.3g}"
+        elif kind == "eq_abs":
+            ok = f == band
+            detail = f"== {band}"
         elif b is None:
             ok, detail = False, "missing from baseline"
         elif kind == "min_ratio":

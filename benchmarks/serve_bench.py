@@ -40,9 +40,43 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
+
+
+def compile_guard() -> dict:
+    """Runtime sanitizer lane (repro.analysis.sanitizer) in a fresh
+    subprocess: transfer-guarded fused steps plus warm/steady compile
+    counts.  A subprocess because compile counting must start from an
+    empty executable cache — the bench process has already compiled
+    dozens of step variants by the time this section runs.
+
+    The counts are deterministic (same engines, same shape layout every
+    run), so check_bench gates them exactly: steady_new_executables
+    must be 0 and warm_executables must not grow past the committed
+    baseline."""
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.sanitizer", "--json"],
+        capture_output=True, text=True, env=env)
+    try:
+        doc = json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        return {"ok": False,
+                "error": (proc.stderr or proc.stdout)[-2000:]}
+    out = {"ok": doc["ok"]}
+    for res in doc["scenarios"]:
+        out[res["scenario"]] = {
+            k: res.get(k) for k in ("warm_executables",
+                                    "steady_new_executables",
+                                    "transfer_guard", "ok", "error")
+            if k in res}
+    return out
 
 
 def build_workload(n_requests: int, max_new: int, seed: int = 0):
@@ -572,6 +606,9 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
                             n_slots=min(n_slots, 4), max_len=max_len,
                             repeats=max(repeats, 2))
 
+    # -- runtime sanitizer: transfer guard + steady-state compile count -
+    guard_res = compile_guard()
+
     out = {
         "workload": {"n_requests": n_requests, "max_new": max_new,
                      "prompt_lens": [len(w["tokens"]) for w in workload],
@@ -584,6 +621,7 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "prefix_cache": prefix_res,
         "speculative": spec_res,
         "router": router_res,
+        "compile_guard": guard_res,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     with open(out_path, "w") as f:
@@ -642,6 +680,16 @@ def main():
           f"2-replica {rt['affinity']['tok_per_s']:.0f} tok/s vs "
           f"1-replica {rt['single']['tok_per_s']:.0f} tok/s "
           f"(ratio {rt['tok_per_s_ratio_vs_single']:.2f})")
+    cg = res["compile_guard"]
+    if cg.get("error"):
+        print(f"sanitizer  : FAILED — {cg['error'][:200]}")
+    else:
+        ms, sp = cg["mixed_sampling"], cg["speculative"]
+        print(f"sanitizer  : {'ok' if cg['ok'] else 'FAIL'}  "
+              f"transfer guard disallow; executables warm/steady "
+              f"{ms['warm_executables']}/+{ms['steady_new_executables']} "
+              f"mixed, {sp['warm_executables']}/+"
+              f"{sp['steady_new_executables']} speculative")
     if res["speedup"] <= 1.0 and not args.smoke:
         # --smoke is a does-it-run canary: 4 under-saturated requests,
         # single repeat — not a throughput measurement

@@ -1,0 +1,32 @@
+"""repro.analysis — repo-specific invariant checker.
+
+Static AST rules over the serving/kernel tree plus a runtime sanitizer
+lane, both driven by ``tools/check_invariants.py``:
+
+  R1 host-sync       device->host syncs inside the fused-step call graph
+  R2 recompile-risk  Python-value-dependent shapes / mutable captures in
+                     jit or pallas scopes
+  R3 lock-discipline registered shared state mutated without its lock
+  R4 donation-safety donated buffers read after the donating call
+  R5 pragma-hygiene  stale or unjustified ``# inv-ok[...]`` pragmas
+
+Suppression pragma (justification string is mandatory)::
+
+    x = jax.device_get(acc)   # inv-ok[R1]: the one sanctioned sync
+
+Runtime side (``repro.analysis.sanitizer``): wraps the engine's fused
+step in ``jax.transfer_guard("disallow")`` and counts XLA executables
+via ``jax.log_compiles`` to assert zero new compiles after warmup.
+"""
+from .pragmas import Pragma, scan_pragmas
+from .report import Finding, format_report, run_static
+from .rules import RULE_IDS
+
+__all__ = [
+    "Finding",
+    "Pragma",
+    "RULE_IDS",
+    "format_report",
+    "run_static",
+    "scan_pragmas",
+]

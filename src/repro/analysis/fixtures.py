@@ -1,0 +1,176 @@
+"""Seeded violation fixtures for the invariant checker's selftest.
+
+One synthetic module per rule, each containing at least one *seeded*
+violation (marked with a ``# seeded[R#]`` comment on the offending
+line) next to a clean twin that must NOT fire.  The selftest
+(``tools/check_invariants.py --selftest`` and tests/test_analysis.py)
+writes these to a temp dir, runs the full static pass with the fixture
+registry below, and asserts the found (rule, line) set matches the
+seeded set exactly — both directions: every seeded line fires, and
+nothing unseeded does.
+
+The marker comment is *not* pragma syntax, so it never suppresses the
+finding it labels.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from types import SimpleNamespace
+
+from repro.analysis.registry import LockRule
+from repro.analysis.report import run_static
+
+SEED_RE = re.compile(r"#\s*seeded\[(R[1-5])\]")
+
+FIXTURES: dict[str, str] = {
+    # R1: host syncs reachable from a registered step-loop entry point.
+    "fix_r1.py": '''\
+import jax
+import numpy as np
+
+
+class Engine:
+    def step(self):
+        x = self._compute()
+        jax.block_until_ready(x)  # seeded[R1]
+        host = np.asarray(self._buf())  # seeded[R1]
+        return x.item() + host.sum()  # seeded[R1]
+
+    def warmup(self):
+        # registered stop: syncing here is control-plane, not flagged
+        jax.block_until_ready(self._compute())
+
+    def _compute(self):
+        return jax.numpy.zeros(())
+
+    def _buf(self):
+        return jax.numpy.zeros((4,))
+''',
+    # R2: recompile risk inside a jit root.
+    "fix_r2.py": '''\
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def good(x, n):
+    return x + jnp.arange(n)
+
+
+@jax.jit
+def bad(x, n):
+    return x + jnp.arange(n)  # seeded[R2]
+
+
+@jax.jit
+def bad_slice(x, k):
+    return x[:k].sum()  # seeded[R2]
+''',
+    # R3: shared-attr store without the owning lock (inline registry).
+    "fix_r3.py": '''\
+import threading
+
+
+class Store:
+    _inv_locks_ = {"items": ("_lock",), "count": ("_lock",)}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []
+        self.count = 0
+
+    def good(self, x):
+        with self._lock:
+            self.items.append(x)
+            self.count += 1
+
+    def bad(self, x):
+        self.items = [x]  # seeded[R3]
+        self.count += 1  # seeded[R3]
+''',
+    # R4: donated buffer read after the donating call.
+    "fix_r4.py": '''\
+import jax
+
+
+def _impl(buf, x):
+    return buf + x
+
+
+step = jax.jit(_impl, donate_argnums=(0,))
+
+
+def good(buf, x):
+    out = step(buf, x)
+    buf = out            # rebind before any read: fine
+    return buf + 1
+
+
+def bad(buf, x):
+    out = step(buf, x)
+    stale = buf + 1  # seeded[R4]
+    return out, stale
+''',
+    # R5: pragma hygiene — stale and malformed pragmas are findings.
+    "fix_r5.py": '''\
+CLEAN = 1  # inv-ok[R1]: nothing on this line ever fired  # seeded[R5]
+BROKEN = 2  # inv-ok[R9]: unknown rule id is malformed  # seeded[R5]
+''',
+}
+
+FIXTURE_REGISTRY = SimpleNamespace(
+    HOST_ENTRIES=(("fix_r1.py", "Engine.step"),),
+    HOST_STOPS={("fix_r1.py", "Engine.warmup"): "control-plane fixture"},
+    ATTR_TARGETS={},
+    LOCK_RULES=(),
+    LockRule=LockRule,
+    DONATION_RULES=(),
+    DONATION_REASSIGNERS={},
+)
+
+
+def seeded_expectations(sources: dict[str, str],
+                        base: str) -> set[tuple[str, str, int]]:
+    """(rule, path, line) for every ``# seeded[R#]`` marker."""
+    out = set()
+    for name, src in sources.items():
+        for i, line in enumerate(src.splitlines(), start=1):
+            for m in SEED_RE.finditer(line):
+                out.add((m.group(1), os.path.join(base, name), i))
+    return out
+
+
+def run_selftest() -> tuple[bool, list[str]]:
+    """Write the fixtures, run the pass, diff found vs seeded.
+
+    Returns ``(ok, report_lines)``.
+    """
+    lines: list[str] = []
+    with tempfile.TemporaryDirectory(prefix="inv_fixtures_") as tmp:
+        for name, src in FIXTURES.items():
+            with open(os.path.join(tmp, name), "w") as f:
+                f.write(src)
+        unsuppressed, _ = run_static([tmp], reg=FIXTURE_REGISTRY)
+        found = {(f.rule, f.path, f.line) for f in unsuppressed}
+        expected = seeded_expectations(FIXTURES, tmp)
+
+        missing = expected - found
+        extra = found - expected
+        for rule, path, line in sorted(missing):
+            lines.append(f"MISSED  {os.path.basename(path)}:{line} "
+                         f"seeded {rule} did not fire")
+        for rule, path, line in sorted(extra):
+            lines.append(f"SPURIOUS {os.path.basename(path)}:{line} "
+                         f"unseeded {rule} fired")
+        by_rule = {r: sum(1 for (fr, _, _) in expected if fr == r)
+                   for r in ("R1", "R2", "R3", "R4", "R5")}
+        lines.append("selftest: " + "  ".join(
+            f"{r}x{n}" for r, n in by_rule.items()))
+        ok = not missing and not extra
+        lines.append("selftest OK: every seeded violation fired, nothing "
+                     "else did" if ok else "selftest FAILED")
+    return ok, lines

@@ -13,23 +13,23 @@ Usage:
 Artifacts land in benchmarks/artifacts/dryrun/<arch>__<cell>__<mesh>.json
 (existing artifacts are skipped unless --force)."""
 
-import argparse          # noqa: E402
-import pathlib           # noqa: E402
-import re                # noqa: E402
-import sys               # noqa: E402
-import time              # noqa: E402
-import traceback         # noqa: E402
+import argparse
+import pathlib
+import re
+import sys
+import time
+import traceback
 
-import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np       # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCH_IDS, cells_for, get_config  # noqa: E402
-from repro.configs.base import SHAPE_CELLS, ShapeCell, TrainConfig  # noqa: E402
-from repro.dist import sharding as shd  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models.api import get_model  # noqa: E402
+from repro.configs import ARCH_IDS, cells_for, get_config
+from repro.configs.base import SHAPE_CELLS, ShapeCell, TrainConfig
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import get_model
 
 try:
     import orjson
@@ -198,7 +198,7 @@ def run_cell(arch: str, cell: ShapeCell, mesh_kind: str, *, force=False,
               f"bytes={rec['bytes_accessed']:.3e} "
               f"coll={coll['total']:.3e} "
               f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()[-4000:]})
         print(f"[FAIL] {name}: {type(e).__name__}: {e}")
@@ -286,7 +286,7 @@ def run_cell_calibrated(arch: str, cell: ShapeCell, mesh_kind: str,
         print(f"[ok] {name}: flops={rec['flops']:.3e} "
               f"bytes={rec['bytes_accessed']:.3e} "
               f"coll={rec['collectives']['total']:.3e}")
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()[-4000:]})
         print(f"[FAIL] {name}: {type(e).__name__}: {e}")

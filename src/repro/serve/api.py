@@ -281,33 +281,36 @@ class RequestHandle:
         handle refuses delivery outright."""
         if idx != len(self._toks) or self.cancelled or self._stopped:
             return
-        self._toks.append(tok)
-        if self.ttft_s is None and idx == 0:
-            self.ttft_s = time.perf_counter() - self._submit_s
+        with self._cv:
+            self._toks.append(tok)
+            if self.ttft_s is None and idx == 0:
+                self.ttft_s = time.perf_counter() - self._submit_s
+            self._cv.notify_all()
+        # user callback runs outside the lock: it may block or re-enter
         if self.on_token is not None:
             self.on_token(idx, tok)
-        with self._cv:
-            self._cv.notify_all()
 
     def _finish(self, out: np.ndarray, first_tok_t: Optional[float]) -> None:
         # TTFT first: the backfill below would otherwise stamp token 0
         # with completion time on a handle that never streamed
-        if self.ttft_s is None and first_tok_t is not None:
-            self.ttft_s = first_tok_t - self._submit_s
+        if first_tok_t is not None:
+            with self._cv:
+                if self.ttft_s is None:
+                    self.ttft_s = first_tok_t - self._submit_s
         for i in range(len(self._toks), len(out)):
             self._feed(i, int(out[i]))
-        self._result = np.asarray(out, np.int32)
-        self.done_s = time.perf_counter() - self._submit_s
         with self._cv:
+            self._result = np.asarray(out, np.int32)
+            self.done_s = time.perf_counter() - self._submit_s
             self._cv.notify_all()
 
     def _mark_cancelled(self) -> None:
         """Seal the handle after an engine-level cancel: the result is
         whatever was delivered before the cut."""
-        self.cancelled = True
-        self._result = np.asarray(self._toks, np.int32)
-        self.done_s = time.perf_counter() - self._submit_s
         with self._cv:
+            self.cancelled = True
+            self._result = np.asarray(self._toks, np.int32)
+            self.done_s = time.perf_counter() - self._submit_s
             self._cv.notify_all()
 
     def _mark_stopped(self) -> None:
@@ -315,8 +318,8 @@ class RequestHandle:
         unblock every consumer with EngineStopped instead of hanging."""
         if self.done:
             return
-        self._stopped = True
         with self._cv:
+            self._stopped = True
             self._cv.notify_all()
 
 
@@ -441,7 +444,7 @@ class Engine:
         for i, st in enumerate(self.core.sched.slots):
             if st.active and st.req.rid == handle.rid:
                 if st.n_out > len(handle._toks):
-                    out = np.asarray(self.core.out_buf[i, :st.n_out])
+                    out = np.asarray(self.core.out_buf[i, :st.n_out])  # inv-ok[R1]: one-off gap closure when a consumer attaches mid-stream, not on the step path
                     for j in range(len(handle._toks), st.n_out):
                         handle._feed(j, int(out[j]))
                 return
@@ -506,7 +509,7 @@ class Engine:
                 break
         # attribute the tail of in-flight device work to decode time
         t0 = time.perf_counter()
-        jax.block_until_ready(self.core.out_buf)
+        jax.block_until_ready(self.core.out_buf)  # inv-ok[R1]: end-of-run drain before wall-clock accounting
         self.core.stats["decode_s"] += time.perf_counter() - t0
         # snapshot under the submit lock: another thread may be inserting
         # handles while this one drains

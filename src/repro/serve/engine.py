@@ -142,10 +142,14 @@ class ServeEngine:
         # columns for the draft forwards (a real byte cut); per-row draft
         # ranks (policy.draft_ranks) stay within [grid floor, r_cap]
         self._draft_cap = None
+        self._grid_lo = None
         if self.speculative and self.cache.rank_on:
+            # captured here, NOT read off cfg inside the traced body:
+            # the jit closure must only see init-time immutables
             g_lo = int(cfg.rank.rank_grid[0])
             want = int(np.ceil(self.cache.r_keep * self.draft_rank_frac))
             self._draft_cap = min(max(g_lo, want, 1), self.cache.r_keep)
+            self._grid_lo = g_lo
         self.prefix = PrefixCache(self.cache) if prefix_cache else None
         # submit() and admission (scheduler pop + device staging) may run
         # on different threads; one lock covers both critical sections
@@ -157,6 +161,10 @@ class ServeEngine:
             raise ValueError(
                 f"family {cfg.family!r} has no paged decode step")
         self._pf_cfg = cfg.with_(rank=cfg.rank.__class__(mode="off"))
+        # init-time capture for the jitted prefill closure: reset()
+        # swaps self.cache, and a traced body must never read through a
+        # reassignable attribute (stale capture / silent retrace)
+        self._pf_collect_mass = self.cache.rank_on
         self._prefill = jax.jit(self._prefill_impl)
         self._decide = (make_decide_fn(cfg, policy_params)
                         if cfg.rank.mode != "off" else None)
@@ -337,6 +345,18 @@ class ServeEngine:
         with self._lock:
             return self.prefix.probe(tokens)
 
+    def _adopt_pools(self, pools) -> None:
+        """Re-capture the fused step's (donated) pool outputs.  The
+        optional factor/mass pools are adopted only when the step
+        returned them — never by re-reading the donated input as a
+        fallback, which a donating backend may already have
+        invalidated."""
+        self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
+        if "kt" in pools:
+            self.cache.kt_pool = pools["kt"]
+        if "mass" in pools:
+            self.cache.mass_pool = pools["mass"]
+
     def warmup(self) -> float:
         """Compile (and run once, results discarded) every executable the
         queued requests will need; the elapsed time lands in
@@ -376,9 +396,7 @@ class ServeEngine:
                 jnp.zeros((ns,), bool), self.out_buf,
                 self._plen_dev, self._temp_dev, self._topk_dev,
                 self._topp_dev, self._seed_dev, self.prompt_buf)
-            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
-            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
-            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self._adopt_pools(pools)
             self.out_buf = ob
             jax.block_until_ready(tok)
             pools, tok, ob, _, _, _, _ = self._step_spec(
@@ -391,9 +409,7 @@ class ServeEngine:
                 self._topp_dev, self._seed_dev, self.prompt_buf,
                 self.cache.spectra, jnp.ones((ns,), jnp.int32),
                 jnp.full((ns,), -1, jnp.int32))
-            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
-            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
-            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self._adopt_pools(pools)
             self.out_buf = ob
             jax.block_until_ready(tok)
             dt = time.perf_counter() - t0
@@ -411,9 +427,7 @@ class ServeEngine:
                 jnp.zeros((ns,), bool), self.out_buf,
                 self._plen_dev, self._temp_dev, self._topk_dev,
                 self._topp_dev, self._seed_dev, *extra)
-            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
-            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
-            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self._adopt_pools(pools)
             self.out_buf = ob
             jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
@@ -430,10 +444,10 @@ class ServeEngine:
         from repro.models import transformer as tr
         logits, aux = tr.forward_dense(self._pf_cfg, params, tokens,
                                        collect_aux="rl", collect_qkv=True,
-                                       collect_mass=self.cache.rank_on,
+                                       collect_mass=self._pf_collect_mass,
                                        mass_q_len=q_len)
         qkv = aux["layers"]["qkv"]
-        mass = aux["layers"]["mass"] if self.cache.rank_on else None
+        mass = aux["layers"]["mass"] if self._pf_collect_mass else None
         return logits, qkv["k"], qkv["v"], mass
 
     def _select_token(self, logits, out_pos, temps, topks, topps, seeds):
@@ -585,7 +599,7 @@ class ServeEngine:
         else:
             d_ranks = draft_ranks(ranks, spectra,
                                   frac=self.draft_rank_frac,
-                                  grid_lo=int(self.cfg.rank.rank_grid[0]),
+                                  grid_lo=self._grid_lo,
                                   r_cap=self._draft_cap)
             d_basis = basis[..., :self._draft_cap]
             d_kt = (None if kt_pool is None
@@ -882,8 +896,8 @@ class ServeEngine:
         phys = self.cache.page_table[np.arange(ns), pos // ps]
         k_tok = self.cache.k_pool[0][jnp.asarray(phys),
                                      jnp.asarray(pos % ps)]
-        drift = np.asarray(self._drift(k_tok, self.cache.basis[0],
-                                       self.cache.ranks))
+        drift = np.asarray(  # inv-ok[R1]: drift check runs on the decide cadence (every decide_every steps), one small-vector fetch, never per decode step
+            self._drift(k_tok, self.cache.basis[0], self.cache.ranks))
         for i in live:
             if self.has_rank[i] and drift[i] > self.drift_threshold:
                 self.force_decide[i] = True
@@ -966,14 +980,12 @@ class ServeEngine:
             self._plen_dev, self._temp_dev, self._topk_dev,
             self._topp_dev, self._seed_dev, self.prompt_buf,
             self.cache.spectra, jnp.asarray(caps), self._eos_dev)
-        self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
-        self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
-        self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+        self._adopt_pools(pools)
         self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
         # the accept fetch doubles as the emission sync: streaming handles
         # need every accepted token this step anyway, so this is the same
         # one-host-sync-per-step budget as the plain path's tok fetch
-        acc_h, emit_h = jax.device_get((acc, emitted))
+        acc_h, emit_h = jax.device_get((acc, emitted))  # inv-ok[R1]: the one sanctioned per-step sync — the accept/emission fetch doubles as the streaming emit
         dt = (time.perf_counter() - t0) if self.time_per_token else None
         now_t = time.perf_counter()
         for i in live:
@@ -1026,7 +1038,7 @@ class ServeEngine:
     def _evict_finished(self) -> None:
         for i, st in enumerate(self.sched.slots):
             if st.active and self.sched.should_evict(i):
-                outputs = np.asarray(self.out_buf[i, :st.n_out]).tolist()
+                outputs = np.asarray(self.out_buf[i, :st.n_out]).tolist()  # inv-ok[R1]: one-shot fetch of a finished request's output at eviction, not per-step
                 if st.latencies:
                     self.first_token_s.append(st.latencies[0])
                     self.token_latencies.extend(st.latencies[1:])
@@ -1085,18 +1097,16 @@ class ServeEngine:
                 self.cache.basis, self._active_dev, self.out_buf,
                 self._plen_dev, self._temp_dev, self._topk_dev,
                 self._topp_dev, self._seed_dev, *extra)
-            self.cache.k_pool, self.cache.v_pool = pools["k"], pools["v"]
-            self.cache.kt_pool = pools.get("kt", self.cache.kt_pool)
-            self.cache.mass_pool = pools.get("mass", self.cache.mass_pool)
+            self._adopt_pools(pools)
             self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
             dt = None
             if self.time_per_token:
-                jax.block_until_ready(tok)
+                jax.block_until_ready(tok)  # inv-ok[R1]: opt-in timing mode deliberately syncs to attribute per-step latency
                 dt = time.perf_counter() - t0
             emitting = decoding + finishing
             need_tok = (self._stream_sync and emitting) or any(
                 self.sched.slots[i].req.eos_id is not None for i in emitting)
-            tok_host = np.asarray(tok[:, 0]) if need_tok else None
+            tok_host = np.asarray(tok[:, 0]) if need_tok else None  # inv-ok[R1]: the plain path's one sanctioned per-step sync — EOS detection and streaming need this step's token
             now_t = time.perf_counter()
             for i in live:
                 st = self.sched.slots[i]
@@ -1147,7 +1157,7 @@ class ServeEngine:
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
-        jax.block_until_ready(self.out_buf)
+        jax.block_until_ready(self.out_buf)  # inv-ok[R1]: end-of-run drain before the wall clock is read
         wall = time.perf_counter() - t0
         self.stats["decode_s"] += max(
             wall - (self.stats["prefill_s"] - p0), 0.0)

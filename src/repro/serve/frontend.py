@@ -144,8 +144,9 @@ class FrontEnd:
             self._wake.clear()
             try:
                 busy = self.engine.step()
-            except BaseException as e:            # noqa: B036 — the loop
-                # must never die silently: record, strand no consumer
+            # deliberately BaseException, not Exception: the loop must
+            # never die silently — record the error, strand no consumer
+            except BaseException as e:
                 self._error = e
                 self._abort_handles()
                 with self._idle_cv:

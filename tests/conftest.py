@@ -10,9 +10,9 @@ try:
 except ImportError:  # container has no hypothesis wheel — use the shim
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
 
-import jax  # noqa: E402
+import jax
 
-import repro  # noqa: E402,F401  (applies the jax forward-compat shim)
+import repro  # noqa: F401  (applies the jax forward-compat shim)
 
 jax.config.update("jax_enable_x64", False)
 

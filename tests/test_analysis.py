@@ -1,0 +1,156 @@
+"""Static invariant checker (repro.analysis): per-rule fixtures,
+pragma life-cycle, and the whole-repo cleanliness smoke.
+
+Each rule gets a positive (seeded violation fires), a negative (the
+clean twin in the same fixture stays silent), a pragma'd variant (the
+same violation with a justified ``inv-ok`` comment moves to the
+suppressed list), and the hygiene cases (stale and malformed pragmas
+are themselves findings).  The final smoke asserts the real tree under
+``src/`` is clean — the same gate CI runs via tools/check_invariants.py.
+"""
+import os
+
+import pytest
+
+from repro.analysis.fixtures import (
+    FIXTURE_REGISTRY,
+    FIXTURES,
+    SEED_RE,
+    run_selftest,
+    seeded_expectations,
+)
+from repro.analysis.pragmas import scan_pragmas
+from repro.analysis.report import format_report, run_static
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_fixture(tmp_path, name, source):
+    path = tmp_path / name
+    path.write_text(source)
+    un, sup = run_static([str(path)], reg=FIXTURE_REGISTRY)
+    return str(path), un, sup
+
+
+def _seeded_lines(source, rule):
+    return {i for i, line in enumerate(source.splitlines(), start=1)
+            if any(m.group(1) == rule for m in SEED_RE.finditer(line))}
+
+
+# ---------------------------------------------------------------------------
+# per-rule positive + negative
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule,fixture", [
+    ("R1", "fix_r1.py"),
+    ("R2", "fix_r2.py"),
+    ("R3", "fix_r3.py"),
+    ("R4", "fix_r4.py"),
+    ("R5", "fix_r5.py"),
+])
+def test_rule_fires_exactly_on_seeded_lines(tmp_path, rule, fixture):
+    src = FIXTURES[fixture]
+    _, un, _ = _run_fixture(tmp_path, fixture, src)
+    found = {f.line for f in un if f.rule == rule}
+    assert found == _seeded_lines(src, rule), \
+        f"{rule} fired on {sorted(found)}, seeded " \
+        f"{sorted(_seeded_lines(src, rule))}"
+    # negative: nothing outside the seeded set, for ANY rule
+    all_seeded = {(r, ln) for (r, _, ln)
+                  in seeded_expectations({fixture: src}, str(tmp_path))}
+    assert {(f.rule, f.line) for f in un} == all_seeded
+
+
+def test_selftest_roundtrip():
+    ok, lines = run_selftest()
+    assert ok, "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# pragma life-cycle
+# ---------------------------------------------------------------------------
+
+def test_justified_pragma_suppresses(tmp_path):
+    src = FIXTURES["fix_r1.py"].replace(
+        "jax.block_until_ready(x)  # seeded[R1]",
+        "jax.block_until_ready(x)  # inv-ok[R1]: test suppression")
+    _, un, sup = _run_fixture(tmp_path, "fix_r1.py", src)
+    assert not any(f.rule == "R1" and "block_until_ready" in f.message
+                   for f in un)
+    assert any(f.rule == "R1" and "block_until_ready" in f.message
+               for f in sup)
+    # the pragma is live, so no R5 stale finding appears for its line
+    assert not any(f.rule == "R5" for f in un)
+
+
+def test_pragma_only_covers_listed_rule(tmp_path):
+    # an R4 pragma on an R1 violation suppresses nothing — and is
+    # itself stale
+    src = FIXTURES["fix_r1.py"].replace(
+        "jax.block_until_ready(x)  # seeded[R1]",
+        "jax.block_until_ready(x)  # inv-ok[R4]: wrong rule on purpose")
+    path, un, sup = _run_fixture(tmp_path, "fix_r1.py", src)
+    assert any(f.rule == "R1" and "block_until_ready" in f.message
+               for f in un)
+    assert any(f.rule == "R5" and "stale" in f.message for f in un)
+
+
+def test_stale_pragma_is_a_finding(tmp_path):
+    _, un, _ = _run_fixture(tmp_path, "clean.py",
+                            "X = 1  # inv-ok[R1]: nothing ever fired here\n")
+    assert [f.rule for f in un] == ["R5"]
+    assert "stale" in un[0].message
+
+
+@pytest.mark.parametrize("line,complaint", [
+    ("X = 1  # inv-ok[R1]", "justification"),
+    ("X = 1  # inv-ok[]: no rules listed", "no rules"),
+    ("X = 1  # inv-ok[R7]: not a rule", "unknown rule"),
+])
+def test_malformed_pragmas_are_findings(tmp_path, line, complaint):
+    _, un, _ = _run_fixture(tmp_path, "bad.py", line + "\n")
+    assert [f.rule for f in un] == ["R5"]
+    assert complaint in un[0].message
+
+
+def test_pragma_scanner_parses_multi_rule():
+    pragmas = scan_pragmas(
+        "x.py", "y = 1  # inv-ok[R1,R4]: one reason for both\n")
+    assert len(pragmas) == 1
+    assert pragmas[0].rules == ("R1", "R4")
+    assert pragmas[0].malformed is None
+    assert pragmas[0].covers("R4", 1) and not pragmas[0].covers("R2", 1)
+
+
+# ---------------------------------------------------------------------------
+# report formatting
+# ---------------------------------------------------------------------------
+
+def test_json_report_shape(tmp_path):
+    import json
+    _, un, sup = _run_fixture(tmp_path, "fix_r3.py", FIXTURES["fix_r3.py"])
+    doc = json.loads(format_report(un, sup, fmt="json"))
+    assert doc["ok"] is False
+    assert doc["counts"]["R3"] == len(_seeded_lines(FIXTURES["fix_r3.py"],
+                                                    "R3"))
+    assert all({"rule", "path", "line", "col", "message",
+                "rule_name"} <= set(f) for f in doc["findings"])
+
+
+def test_clean_tree_reports_ok(tmp_path):
+    _, un, sup = _run_fixture(tmp_path, "fine.py", "X = 1\n")
+    assert not un and not sup
+    assert "invariants clean" in format_report(un, sup)
+
+
+# ---------------------------------------------------------------------------
+# whole-repo smoke: the real tree must be clean under the real registry
+# ---------------------------------------------------------------------------
+
+def test_repo_tree_is_clean():
+    un, sup = run_static([REPO_SRC])
+    assert not un, format_report(un, sup)
+    # the sanctioned syncs exist and stay visible as suppressions
+    assert any(f.rule == "R1" and f.path.endswith("serve/engine.py")
+               for f in sup), \
+        "expected the engine's sanctioned per-step sync among suppressions"

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Repo invariant checker CLI — static pass + runtime sanitizer driver.
+
+Static rules (see repro.analysis for the full contract):
+
+  R1 host-sync        no hidden host<->device sync in the step-loop graph
+  R2 recompile-risk   no shape-/capture-driven recompiles in jit scopes
+  R3 lock-discipline  shared engine state mutated only under its lock
+  R4 donation-safety  donated buffers never read after the donating call
+  R5 pragma-hygiene   inv-ok pragmas are well-formed, justified, and live
+
+Usage::
+
+    PYTHONPATH=src python tools/check_invariants.py [paths ...]
+    PYTHONPATH=src python tools/check_invariants.py --report json --out r.json
+    PYTHONPATH=src python tools/check_invariants.py --selftest
+    PYTHONPATH=src python tools/check_invariants.py --sanitize
+
+* default paths: ``src`` (the whole tree must be clean in CI);
+* ``--selftest`` runs the seeded per-rule fixtures
+  (repro.analysis.fixtures) and exits non-zero unless every seeded
+  violation fires and nothing unseeded does — the checker checking
+  itself;
+* ``--sanitize`` additionally runs the runtime lane
+  (repro.analysis.sanitizer): transfer-guarded fused steps + the
+  zero-steady-state-compile assertion.
+
+Exit status: 0 clean, 1 findings (or selftest/sanitizer failure).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.report import format_report, run_static  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static invariant checker (R1-R5) + runtime sanitizer")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to check (default: src)")
+    ap.add_argument("--report", choices=["text", "json"], default="text")
+    ap.add_argument("--out", help="also write the report to this file")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the seeded per-rule fixtures instead of "
+                         "checking the tree")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="also run the runtime sanitizer lane "
+                         "(transfer guard + compile counting)")
+    args = ap.parse_args(argv)
+
+    rc = 0
+
+    if args.selftest:
+        from repro.analysis.fixtures import run_selftest
+        ok, lines = run_selftest()
+        print("\n".join(lines))
+        return 0 if ok else 1
+
+    unsuppressed, suppressed = run_static(args.paths or ["src"])
+    report = format_report(unsuppressed, suppressed, fmt=args.report)
+    print(report)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report + "\n")
+    if unsuppressed:
+        rc = 1
+
+    if args.sanitize:
+        from repro.analysis.sanitizer import main as sanitize_main
+        print("-- runtime sanitizer " + "-" * 40)
+        rc = max(rc, sanitize_main([]))
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
