@@ -37,6 +37,7 @@ def _get(d, path):
 #   "min_ratio" fresh >= band * baseline
 #   "max_ratio" fresh <= band * baseline
 #   "min_abs"   fresh >= band (baseline shown for context only)
+#   "max_abs"   fresh <= band (baseline shown for context only)
 #   "eq_abs"    fresh == band exactly (deterministic counters only)
 #   "info"      reported, never gated (wall-clock on shared runners)
 CHECKS = [
@@ -73,6 +74,25 @@ CHECKS = [
      "2-replica aggregate vs 1 replica (wall-clock: report, don't gate)"),
     ("engine.tok_per_s", "info", None,
      "absolute throughput (runner-speed dependent)"),
+    # learned rank policy: trace -> offline train -> replay. Reward and
+    # kept rank are deterministic given model + workload suite; the
+    # constrained oracle dominates the adaptive heuristic by
+    # construction, so a trained policy that loses reward or inflates
+    # rank has failed to fit — that's a regression, not noise
+    ("learned_policy.replay.valid", "flag", None,
+     "mode='learned' serves the full replay suite with valid streams"),
+    ("learned_policy.reward_gain", "min_abs", -0.002,
+     "learned Eq. 13 reward must match/beat the adaptive heuristic "
+     "(small band = BC fit tolerance)"),
+    ("learned_policy.rank_ratio", "max_abs", 1.0005,
+     "learned/adaptive mean kept rank — the policy may not buy reward "
+     "with extra factor-read bytes (trainer's constrained snapshot "
+     "selection guarantees <= 1 whenever any snapshot achieves it)"),
+    ("learned_policy.agreement_gain", "info", None,
+     "retained-energy agreement, learned minus adaptive"),
+    ("learned_policy.replay.serve_rank_ratio", "info", None,
+     "kept-rank ratio during live replay (policy feeds back into its "
+     "own prev-rank state: report, don't gate)"),
     # runtime sanitizer lane: deterministic counters, gated EXACTLY —
     # one extra executable in steady state is a latency cliff, not noise
     ("compile_guard.ok", "flag", None,
@@ -81,9 +101,14 @@ CHECKS = [
      "zero new executables across the steady mixed greedy/top-k/top-p run"),
     ("compile_guard.speculative.steady_new_executables", "eq_abs", 0,
      "zero new executables across the steady draft/verify + rank-switch run"),
+    ("compile_guard.learned_policy.steady_new_executables", "eq_abs", 0,
+     "zero new executables across the steady mode='learned' run (the "
+     "policy net rides the jitted decide executable)"),
     ("compile_guard.mixed_sampling.warm_executables", "max_ratio", 1.0,
      "warmup executable count must not grow past the committed baseline"),
     ("compile_guard.speculative.warm_executables", "max_ratio", 1.0,
+     "warmup executable count must not grow past the committed baseline"),
+    ("compile_guard.learned_policy.warm_executables", "max_ratio", 1.0,
      "warmup executable count must not grow past the committed baseline"),
 ]
 
@@ -102,6 +127,9 @@ def check(fresh: dict, baseline: dict):
         elif kind == "min_abs":
             ok = f >= band
             detail = f">= {band:.3g}"
+        elif kind == "max_abs":
+            ok = f <= band
+            detail = f"<= {band:.3g}"
         elif kind == "eq_abs":
             ok = f == band
             detail = f"== {band}"

@@ -34,6 +34,14 @@ cold token parity and the refcount invariant are asserted, and the
 section records hit rate, prefill tokens computed per request (>= 2x
 reduction asserted) and TTFT p50/p95 split hot vs cold.
 
+A ``learned_policy`` section closes the loop on the paper's RL agent
+against serving traffic: the deterministic workload suite
+(repro.serve.workloads) is served under the adaptive heuristic with the
+trace recorder on, repro.train.serve_policy trains the policy net
+offline on that trace, and the suite is replayed with ``mode="learned"``
+— the Eq. 13 reward gain over the heuristic (at equal-or-lower mean kept
+rank) and the replay validity land in the JSON for check_bench to gate.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
 from __future__ import annotations
@@ -370,6 +378,107 @@ def spec_compare(cfg, params, workload, n_slots: int, max_len: int,
     }
 
 
+def learned_policy_compare(cfg, params, smoke: bool = False,
+                           work_dir: str | None = None):
+    """Close the loop on the paper's RL agent against serving traffic:
+    record traces -> train offline -> replay with ``mode="learned"``.
+
+    1. The deterministic workload suite (repro.serve.workloads) is served
+       under the adaptive heuristic with the trace recorder attached —
+       one shared recorder across all scenarios, one dataset out.
+    2. repro.train.serve_policy trains the policy net on that trace
+       (BC warm start -> constrained-oracle BC -> PPO) and the offline
+       replay evaluation scores learned vs adaptive (the recorded
+       actions) vs the constrained oracle on the same Eq. 13 reward.
+    3. The suite is served again with ``mode="learned"`` — stream
+       validity is asserted, and a second trace records the ranks the
+       learned policy actually kept.
+
+    What to gate: ``reward_gain`` (learned minus adaptive Eq. 13 reward,
+    must not be negative — the constrained oracle dominates the
+    heuristic by construction, so a trained policy that loses reward
+    has failed to fit) and ``rank_ratio`` (learned/adaptive mean kept
+    rank, must stay <= 1: the policy may not buy reward with extra
+    factor-read bytes). Both are deterministic given model + workloads.
+    ``replay.serve_rank_ratio`` is informational — at serve time the
+    policy feeds back into its own prev-rank state, so its trajectory
+    legitimately drifts from the offline replay."""
+    import tempfile
+
+    from repro.configs.base import RankConfig
+    from repro.serve import Request, ServeEngine
+    from repro.serve.traces import TraceReader, TraceRecorder
+    from repro.serve.workloads import build, make_workload, workload_names
+    from repro.train.serve_policy import load_policy, train_serve_policy
+
+    n_requests, max_new = (4, 10) if smoke else (8, 24)
+    grid = (4, 8, 12, 16)
+    acfg = cfg.with_(rank=RankConfig(mode="adaptive", rank_grid=grid,
+                                     segment_len=8))
+    lcfg = cfg.with_(rank=RankConfig(mode="learned", rank_grid=grid,
+                                     segment_len=8))
+    specs = [make_workload(n, seed=3, n_requests=n_requests,
+                           max_new=max_new, vocab=cfg.vocab_size,
+                           max_prompt=40) for n in workload_names()]
+
+    def serve_suite(run_cfg, policy_params, recorder):
+        served = 0
+        valid = True
+        for spec in specs:
+            eng = ServeEngine(run_cfg, params, policy_params, n_slots=4,
+                              max_len=96, page_size=16, segment_len=8,
+                              max_new_cap=max_new, prefill_chunk=8,
+                              record_traces=recorder,
+                              **spec.engine_overrides)
+            for r in build(spec):
+                eng.submit(r)
+            outs = eng.run()
+            served += len(outs)
+            valid = valid and all(
+                0 < len(v) <= max_new for v in outs.values())
+        recorder.flush()
+        return served, valid
+
+    with tempfile.TemporaryDirectory() as tmp:
+        base = work_dir or tmp
+        adir, ldir, pdir = (f"{base}/trace_adaptive", f"{base}/trace_learned",
+                            f"{base}/policy")
+        _, a_valid = serve_suite(
+            acfg, None, TraceRecorder(adir, acfg, scenario="suite"))
+        _, history = train_serve_policy(
+            adir, acfg.rank, out_dir=pdir,
+            bc_steps=40 if smoke else 160,
+            ppo_steps=2 if smoke else 8)
+        pol = load_policy(pdir)
+        served, l_valid = serve_suite(
+            lcfg, pol, TraceRecorder(ldir, lcfg, scenario="suite"))
+        rank_adaptive = float(
+            np.mean(TraceReader(adir).records["chosen_rank"]))
+        rank_learned = float(
+            np.mean(TraceReader(ldir).records["chosen_rank"]))
+
+    ev = history["eval"]
+    return {
+        "workloads": workload_names(),
+        "n_requests": n_requests, "max_new": max_new,
+        "n_records": ev["n_records"],
+        "offline": {k: ev[k] for k in ("learned", "adaptive", "oracle")},
+        "picked": ev["picked"],
+        "reward_gain": ev["learned"]["reward"] - ev["adaptive"]["reward"],
+        "rank_ratio": ev["learned"]["mean_rank"]
+                      / max(ev["adaptive"]["mean_rank"], 1e-9),
+        "agreement_gain": ev["learned"]["agreement"]
+                          - ev["adaptive"]["agreement"],
+        "replay": {
+            "served_requests": served,
+            "valid": bool(a_valid and l_valid),
+            "mean_rank_adaptive": rank_adaptive,
+            "mean_rank_learned": rank_learned,
+            "serve_rank_ratio": rank_learned / max(rank_adaptive, 1e-9),
+        },
+    }
+
+
 def router_compare(cfg, params, smoke: bool = False):
     """Multi-replica front door: prefix-affinity routing vs round-robin
     vs a single replica.
@@ -606,6 +715,9 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
                             n_slots=min(n_slots, 4), max_len=max_len,
                             repeats=max(repeats, 2))
 
+    # -- learned rank policy: trace -> offline train -> replay ----------
+    learned_res = learned_policy_compare(cfg, params, smoke=smoke)
+
     # -- runtime sanitizer: transfer guard + steady-state compile count -
     guard_res = compile_guard()
 
@@ -621,6 +733,7 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "prefix_cache": prefix_res,
         "speculative": spec_res,
         "router": router_res,
+        "learned_policy": learned_res,
         "compile_guard": guard_res,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
@@ -680,16 +793,27 @@ def main():
           f"2-replica {rt['affinity']['tok_per_s']:.0f} tok/s vs "
           f"1-replica {rt['single']['tok_per_s']:.0f} tok/s "
           f"(ratio {rt['tok_per_s_ratio_vs_single']:.2f})")
+    lp = res["learned_policy"]
+    print(f"learned    : replay valid {lp['replay']['valid']}  reward "
+          f"{lp['offline']['learned']['reward']:.4f} vs "
+          f"{lp['offline']['adaptive']['reward']:.4f} adaptive "
+          f"(gain {lp['reward_gain']:+.4f}); mean rank "
+          f"{lp['offline']['learned']['mean_rank']:.2f} vs "
+          f"{lp['offline']['adaptive']['mean_rank']:.2f} "
+          f"(ratio {lp['rank_ratio']:.3f}, {lp['n_records']} records)")
     cg = res["compile_guard"]
     if cg.get("error"):
         print(f"sanitizer  : FAILED — {cg['error'][:200]}")
     else:
         ms, sp = cg["mixed_sampling"], cg["speculative"]
+        lg = cg.get("learned_policy", {})
         print(f"sanitizer  : {'ok' if cg['ok'] else 'FAIL'}  "
               f"transfer guard disallow; executables warm/steady "
               f"{ms['warm_executables']}/+{ms['steady_new_executables']} "
               f"mixed, {sp['warm_executables']}/+"
-              f"{sp['steady_new_executables']} speculative")
+              f"{sp['steady_new_executables']} speculative, "
+              f"{lg.get('warm_executables', '?')}/+"
+              f"{lg.get('steady_new_executables', '?')} learned")
     if res["speedup"] <= 1.0 and not args.smoke:
         # --smoke is a does-it-run canary: 4 under-saturated requests,
         # single repeat — not a throughput measurement

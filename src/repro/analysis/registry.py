@@ -59,6 +59,11 @@ ATTR_TARGETS: dict[str, tuple[str, str]] = {
     "core.step": ("serve/engine.py", "ServeEngine.step"),
     "core.run": ("serve/engine.py", "ServeEngine.run"),
     "engine.step": ("serve/api.py", "Engine.step"),
+    # trace-recorder hooks off the step loop (engine.trace is None unless
+    # EngineConfig.record_traces is set)
+    "trace.on_decision": ("serve/traces.py", "TraceRecorder.on_decision"),
+    "trace.on_step": ("serve/traces.py", "TraceRecorder.on_step"),
+    "trace.on_evict": ("serve/traces.py", "TraceRecorder.on_evict"),
 }
 
 

@@ -28,7 +28,10 @@ Scenarios:
 * ``mixed_sampling`` — adaptive ranks, chunked prefill, greedy + top-k +
   nucleus rows in the same batch;
 * ``speculative``   — self-speculative draft/verify with adaptive ranks
-  (rank decisions fire mid-stream on both phases).
+  (rank decisions fire mid-stream on both phases);
+* ``learned_policy`` — ``mode="learned"``: the policy-net rank decision
+  runs device-resident inside the jitted decide executable (untrained
+  params — the check is about executables, not reward).
 
 Run::
 
@@ -139,23 +142,34 @@ def run_scenario(name: str, *, n_requests: int = 6,
     from repro.models.api import get_model
     from repro.serve import Request, ServeEngine
 
+    grid = (4, 8, 12, 16)
+    mode = "learned" if name == "learned_policy" else "adaptive"
     cfg = get_config("drrl-paper", reduced=True).with_(
-        rank=RankConfig(mode="adaptive", rank_grid=(4, 8, 12, 16),
-                        segment_len=8))
+        rank=RankConfig(mode=mode, rank_grid=grid, segment_len=8))
     fns = get_model(cfg)
     params = fns.init(jax.random.PRNGKey(0))
+
+    policy_params = None
+    if mode == "learned":
+        # untrained policy net: executable identity is decided by shapes
+        # and structure, not by the weights, so an init tree is exactly
+        # as compile-prone as a trained checkpoint
+        from repro.core.drrl import feat_dims
+        from repro.core.policy import init_policy
+        policy_params = init_policy(jax.random.PRNGKey(1),
+                                    feat_dims(cfg.rank), len(grid))
 
     sampling = name == "mixed_sampling"
     kwargs = dict(n_slots=4, max_len=64, page_size=16, segment_len=8,
                   max_new_cap=max_new, prefill_chunk=8)
     if sampling:
         kwargs.update(sampling=True, nucleus=True)
-    else:
+    elif name == "speculative":
         kwargs.update(speculative=True, draft_k=3, draft_rank_frac=0.25)
 
     counter = CompileCounter()
     with counter.attached():
-        eng = ServeEngine(cfg, params, **kwargs)
+        eng = ServeEngine(cfg, params, policy_params, **kwargs)
 
         # warm phase: compiles are free here
         for w in _workload(n_requests, max_new, seed=0, sampling=sampling):
@@ -189,12 +203,15 @@ def main(argv=None) -> int:
                     "zero-steady-state-compile check")
     ap.add_argument("--json", action="store_true",
                     help="emit the result dict as JSON on stdout")
-    ap.add_argument("--scenario", choices=["mixed_sampling", "speculative"],
+    ap.add_argument("--scenario",
+                    choices=["mixed_sampling", "speculative",
+                             "learned_policy"],
                     action="append",
-                    help="run only the named scenario(s); default both")
+                    help="run only the named scenario(s); default all")
     args = ap.parse_args(argv)
 
-    scenarios = args.scenario or ["mixed_sampling", "speculative"]
+    scenarios = args.scenario or ["mixed_sampling", "speculative",
+                                  "learned_policy"]
     results = []
     failed = False
     for name in scenarios:

@@ -61,6 +61,9 @@ class RankConfig:
       'adaptive'— energy-threshold Adaptive-SVD heuristic (paper baseline 3)
       'random'  — uniform random rank in the grid (paper baseline 4)
       'drrl'    — the RL policy picks the rank (the paper's method)
+      'learned' — serving only: the drrl inference path with params trained
+                  offline on recorded serving traces
+                  (repro.train.serve_policy); requires policy params
     realisation:
       'masked'  — single executable, eigendirections beyond r are zeroed
                   (training / RL-rollout mode; differentiable)

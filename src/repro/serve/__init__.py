@@ -22,6 +22,12 @@
              cancellation, and a Router that load-balances N replicas
              by queue depth with prefix-cache affinity, configured
              through one FleetConfig.
+- traces:    serving-trace recording (per-segment rank-decision features
+             + outcomes, versioned npz shards) and the replay reader the
+             offline policy trainer (repro.train.serve_policy) consumes.
+- workloads: deterministic named scenario generators (bursty arrivals,
+             long-context, shared-prefix chat, mixed sampling) used for
+             trace generation and replay benchmarking.
 """
 from repro.serve.api import (Engine, EngineConfig, EngineStopped,
                              RequestHandle, SamplingParams, make_engine)
@@ -30,8 +36,13 @@ from repro.serve.frontend import FleetConfig, FrontEnd, Router
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.prefix import PrefixCache, RadixNode
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.traces import (TRACE_SCHEMA_VERSION, TraceReader,
+                                TraceRecorder)
+from repro.serve.workloads import WorkloadSpec, make_workload, workload_names
 
 __all__ = ["Engine", "EngineConfig", "EngineStopped", "RequestHandle",
            "SamplingParams", "make_engine", "ServeEngine", "FleetConfig",
            "FrontEnd", "Router", "PagedKVCache", "PrefixCache",
-           "RadixNode", "Request", "Scheduler"]
+           "RadixNode", "Request", "Scheduler", "TRACE_SCHEMA_VERSION",
+           "TraceReader", "TraceRecorder", "WorkloadSpec", "make_workload",
+           "workload_names"]

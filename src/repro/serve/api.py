@@ -102,7 +102,19 @@ class EngineConfig:
     token-identical to plain decode (greedy and seeded sampling), only
     faster. Requires chunked prefill. ``snapshot_every`` throttles
     prefix-cache mass snapshots to every k-th page boundary (probe /
-    match fall back to the nearest earlier snapshot)."""
+    match fall back to the nearest earlier snapshot).
+    ``adaptive_draft=True`` (speculative engines only) lets an EWMA of
+    the accept fraction shrink the effective draft length when accept
+    runs collapse (below ``draft_shrink_below``) and restore it when
+    they recover (above ``draft_grow_above``); a fully collapsed stream
+    skips the draft forwards entirely, and ``stats['eff_draft_k']``
+    exposes the live value. Token streams stay exactly identical to
+    plain decode either way. ``record_traces=<dir>`` hooks a
+    :class:`repro.serve.traces.TraceRecorder` into the rank-decision
+    path: per-segment decision features and outcomes land in versioned
+    npz shards for offline policy training
+    (``repro.train.serve_policy``); call ``engine.core.trace.flush()``
+    when serving is done."""
     n_slots: int = 4
     max_len: int = 256
     page_size: int = 16
@@ -123,6 +135,10 @@ class EngineConfig:
     draft_k: int = 4
     draft_rank_frac: float = 0.25
     snapshot_every: int = 1
+    adaptive_draft: bool = False
+    draft_shrink_below: float = 0.35
+    draft_grow_above: float = 0.6
+    record_traces: Optional[str] = None
 
     def __post_init__(self):
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
@@ -144,6 +160,8 @@ class EngineConfig:
         if self.snapshot_every < 1:
             raise ValueError(f"snapshot_every must be >= 1, got "
                              f"{self.snapshot_every}")
+        if self.adaptive_draft and not self.speculative:
+            raise ValueError("adaptive_draft requires speculative=True")
 
 
 class EngineStopped(RuntimeError):
@@ -345,7 +363,11 @@ class Engine:
             prefix_cache=c.prefix_cache, prefix_pages=c.prefix_pages,
             speculative=c.speculative, draft_k=c.draft_k,
             draft_rank_frac=c.draft_rank_frac,
-            snapshot_every=c.snapshot_every)
+            snapshot_every=c.snapshot_every,
+            adaptive_draft=c.adaptive_draft,
+            draft_shrink_below=c.draft_shrink_below,
+            draft_grow_above=c.draft_grow_above,
+            record_traces=c.record_traces)
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._finished_seen = 0

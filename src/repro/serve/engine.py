@@ -59,6 +59,11 @@ from repro.serve.scheduler import (Request, Scheduler, bucket_for,
 class ServeEngine:
     """Continuous-batching decode over ``n_slots`` concurrent streams."""
 
+    # cadence of recovery-probe spec steps while eff_k is collapsed to 0
+    _DRAFT_PROBE_EVERY = 8
+    # EWMA smoothing for the adaptive-draft accept-fraction signal
+    _DRAFT_EWMA_ALPHA = 0.4
+
     def __init__(self, cfg: ModelConfig, params, policy_params=None, *,
                  n_slots: int = 4, max_len: int = 256, page_size: int = 16,
                  segment_len: Optional[int] = None,
@@ -74,7 +79,11 @@ class ServeEngine:
                  prefix_pages: Optional[int] = None,
                  speculative: bool = False, draft_k: int = 4,
                  draft_rank_frac: float = 0.25,
-                 snapshot_every: int = 1):
+                 snapshot_every: int = 1,
+                 adaptive_draft: bool = False,
+                 draft_shrink_below: float = 0.35,
+                 draft_grow_above: float = 0.6,
+                 record_traces: Optional[str] = None):
         self.cfg, self.params, self.policy = cfg, params, policy_params
         self.seg = int(segment_len or cfg.rank.segment_len)
         self.n_slots = n_slots
@@ -110,6 +119,28 @@ class ServeEngine:
         if self.snapshot_every < 1:
             raise ValueError(f"snapshot_every must be >= 1, got "
                              f"{snapshot_every}")
+        # adaptive draft length: an EWMA of the per-step accept fraction
+        # drives an effective draft length eff_k in [0, draft_k]. The
+        # fused executables are shape-static (draft_k forwards compile
+        # in), so intermediate eff_k values only shorten the accept caps;
+        # the real saving is eff_k == 0, where decode steps route through
+        # the mixed step and skip the draft forwards entirely. A probe
+        # spec step every _DRAFT_PROBE_EVERY steps samples the accept
+        # signal so a recovered stream grows eff_k back.
+        self.adaptive_draft = bool(adaptive_draft)
+        self.draft_shrink_below = float(draft_shrink_below)
+        self.draft_grow_above = float(draft_grow_above)
+        if self.adaptive_draft and not self.speculative:
+            raise ValueError("adaptive_draft requires speculative=True")
+        self.trace = None
+        if record_traces:
+            from repro.serve.traces import TraceRecorder
+            # a TraceRecorder instance may be shared across sequential
+            # engines (one dataset over a whole workload suite); a fresh
+            # path gets its own recorder
+            self.trace = (record_traces
+                          if isinstance(record_traces, TraceRecorder)
+                          else TraceRecorder(record_traces, cfg))
         self.spec_chunk = (max(self.chunk, self.draft_k + 1)
                            if self.speculative else None)
         # sampling=True compiles the temperature/top-k/gumbel tail into the
@@ -233,7 +264,16 @@ class ServeEngine:
                       "prefix_misses": 0, "prefix_reused_tokens": 0,
                       "prefix_cow": 0, "prefix_evictions": 0,
                       "spec_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0, "spec_tokens": 0}
+                      "spec_accepted": 0, "spec_tokens": 0,
+                      "eff_draft_k": self.draft_k if self.speculative else 0}
+        # adaptive-draft controller state (host-only; never traced)
+        self._eff_k = self.draft_k if self.speculative else 0
+        self._accept_ewma = 1.0
+        self._probe_i = 0
+        if self.trace is not None:
+            # a reset ends every live stream: close their outcome windows
+            for slot in range(ns):
+                self.trace.on_evict(slot)
         # rid -> accepted run length of every speculative step the
         # request decoded in (harvested at eviction/cancel)
         self.request_accept_lens: Dict[int, List[int]] = {}
@@ -319,6 +359,8 @@ class ServeEngine:
                     outputs = np.asarray(self.out_buf[i, :st.n_out]).tolist()
                     if st.accept_lens:
                         self.request_accept_lens[rid] = list(st.accept_lens)
+                    if self.trace is not None:
+                        self.trace.on_evict(i)
                     self.sched.evict(i, self.cache.release, outputs)
                     # a mid-prefill cancel leaves no prefix insertion and
                     # no pending spectra capture for this slot
@@ -879,6 +921,13 @@ class ServeEngine:
                 np.bool_(self.has_rank[i]), np.int32(st.t))
             st.t += 1
             self.stats["decides"] += 1
+            if self.trace is not None:
+                s2_h, rank_h = jax.device_get(  # inv-ok[R1]: trace recording fetches the decision's spectra/rank once per segment boundary (the decide cadence), never per decode step
+                    (self.cache.spectra[i], self.cache.ranks[i]))
+                self.trace.on_decision(
+                    int(i), st.req.rid, st.t - 1,
+                    int(self.cache.lens[i]), int(rank_h),
+                    np.asarray(s2_h), has_prev=not first)
             if first:
                 # lazy prefix-snapshot completion: the slot's first
                 # decision is the prompt decision — persist its layer-0
@@ -891,6 +940,23 @@ class ServeEngine:
         self.force_decide &= ~boundary
 
     def _check_drift(self, live: List[int]) -> None:
+        """Early re-decision trigger: measure the newest K token's residual
+        energy outside each live slot's stored basis and set
+        ``force_decide`` where it exceeds ``drift_threshold``.
+
+        Clock semantics under speculation (tested in
+        tests/test_serve_spec.py): the check fires once per fused step —
+        i.e. once per *accepted run*, not once per token — and always
+        against the **post-accept position**: both call sites run after
+        ``cache.lens`` has advanced past the accepted tokens, so the K
+        token inspected is the last one the verify pass actually wrote.
+        A drifting stream therefore re-decides at most one accepted run
+        (<= draft_k tokens) later than plain decode would, and the forced
+        re-decision lands at the next step's ``_maybe_decide`` — before
+        that step's fused dispatch. Token streams may legally diverge
+        from plain decode under drift + speculation (the re-decision
+        clock is coarser); with drift off (the default) speculation stays
+        bitwise exact."""
         ns, ps = self.n_slots, self.cache.page_size
         pos = np.maximum(self.cache.lens - 1, 0)
         phys = self.cache.page_table[np.arange(ns), pos // ps]
@@ -965,10 +1031,15 @@ class ServeEngine:
                                for s in self.sched.slots])
         self.rank_history.append(
             (self.stats["steps"], self.cache.ranks, active_dec))
+        # adaptive draft: the accept cap honours the controller's current
+        # effective draft length (>= 1 here — a fully collapsed stream
+        # only reaches this path on recovery-probe steps)
+        k_eff = (max(self._eff_k, 1) if self.adaptive_draft
+                 else self.draft_k)
         caps = np.ones((self.n_slots,), np.int32)
         for i in decoding:
             st = slots[i]
-            c = min(self.draft_k + 1, st.req.max_new - st.n_out)
+            c = min(k_eff + 1, st.req.max_new - st.n_out)
             if self._decide is not None:
                 c = min(c, self.seg - st.decode_i % self.seg)
             caps[i] = max(c, 1)
@@ -1012,6 +1083,9 @@ class ServeEngine:
             st.n_out += a
             self.cache.lens[i] += a               # host mirror of _lens_dev
             st.accept_lens.append(a)
+            if self.trace is not None:
+                self.trace.on_step(i, a, dt, accepted=a - 1,
+                                   drafted=int(caps[i]) - 1)
             st.last_tok = int(emit_h[i, a - 1])
             self.last_emitted.extend(
                 (st.req.rid, base + t, int(emit_h[i, t])) for t in range(a))
@@ -1029,6 +1103,19 @@ class ServeEngine:
             # max_new / segment boundaries) — keeps the rate unbiased
             self.stats["spec_drafted"] += sum(
                 min(self.draft_k, int(caps[i]) - 1) for i in decoding)
+        if self.adaptive_draft and decoding:
+            denom = sum(int(caps[i]) - 1 for i in decoding)
+            if denom > 0:
+                num = sum(int(acc_h[i]) - 1 for i in decoding)
+                al = self._DRAFT_EWMA_ALPHA
+                self._accept_ewma = ((1.0 - al) * self._accept_ewma
+                                     + al * num / denom)
+                if self._accept_ewma < self.draft_shrink_below:
+                    self._eff_k //= 2
+                elif self._accept_ewma > self.draft_grow_above:
+                    self._eff_k = min(self.draft_k,
+                                      max(1, self._eff_k) * 2)
+                self.stats["eff_draft_k"] = self._eff_k
         if mid:
             self.stats["mixed_steps"] += 1
         if self._drift is not None and decoding:
@@ -1044,6 +1131,8 @@ class ServeEngine:
                     self.token_latencies.extend(st.latencies[1:])
                 if st.accept_lens:
                     self.request_accept_lens[st.req.rid] = list(st.accept_lens)
+                if self.trace is not None:
+                    self.trace.on_evict(i)
                 self.sched.evict(i, self.cache.release, outputs)
                 self._dirty = True
 
@@ -1058,8 +1147,17 @@ class ServeEngine:
             # at least one row has a token to extend; pure-prefill steps
             # fall through to the mixed step instead — drafting there
             # would run draft_k dead forwards per step for nothing
-            self._step_live_spec(live)
-            live = []
+            spec_now = True
+            if self.adaptive_draft and self._eff_k == 0:
+                # collapsed draft length: decode rides the mixed step
+                # (no draft forwards at all); a probe spec step every
+                # _DRAFT_PROBE_EVERY iterations keeps sampling the
+                # accept signal so a recovered stream grows eff_k back
+                spec_now = self._probe_i % self._DRAFT_PROBE_EVERY == 0
+                self._probe_i += 1
+            if spec_now:
+                self._step_live_spec(live)
+                live = []
         if live:
             slots = self.sched.slots
             mid = [i for i in live if slots[i].mid_prefill]
@@ -1088,8 +1186,13 @@ class ServeEngine:
                                    for s in self.sched.slots])
             self.rank_history.append(
                 (self.stats["steps"], self.cache.ranks, active_dec))
-            step_fn = self._step_mixed if mid else self._step
-            extra = (self.prompt_buf,) if mid else ()
+            # a speculative engine never warms the plain decode step (its
+            # decode-only shape rides _step_mixed with q_lens == 1), so a
+            # collapsed adaptive draft must route through the mixed step
+            # too — dispatching _step here would compile in steady state
+            use_mixed = bool(mid) or self.speculative
+            step_fn = self._step_mixed if use_mixed else self._step
+            extra = (self.prompt_buf,) if use_mixed else ()
             pools, tok, ob, lens = step_fn(
                 self.params, self.cache.k_pool, self.cache.v_pool,
                 self.cache.kt_pool, self.cache.mass_pool,
@@ -1128,6 +1231,8 @@ class ServeEngine:
                 st.decode_i += 1
                 st.n_out += 1
                 self.cache.lens[i] += 1           # host mirror of _lens_dev
+                if self.trace is not None:
+                    self.trace.on_step(i, 1, dt)
                 if tok_host is not None:
                     st.last_tok = int(tok_host[i])
                 if dt is not None:

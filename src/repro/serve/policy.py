@@ -26,6 +26,9 @@ Decision rules per slot (same semantics the lock-step server had):
                              snapped to the compiled grid
   * mode == 'drrl'        -> policy logits per (slot, head) with the Eq. 11
                              safety mask, head-mean argmax per slot
+  * mode == 'learned'     -> same inference path as 'drrl', loaded from a
+                             checkpoint trained offline on recorded serving
+                             traces (repro.train.serve_policy)
   * mode == 'random'      -> uniform grid draw keyed by (slot, clock)
   * transition veto       -> Eq. 9 relative bound at the chosen bucket vs
                              the slot's annealed eps_t, with the "before"
@@ -76,6 +79,14 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
     rcfg = cfg.rank
     if rcfg.mode == "off":
         raise ValueError("decide fn is undefined for rank mode 'off'")
+    if rcfg.mode in ("drrl", "learned") and policy_params is None:
+        # used to fall back silently to 'random' — a misconfigured policy
+        # engine must fail at construction, not serve noise
+        raise ValueError(
+            f"rank mode {rcfg.mode!r} needs policy params: pass them as the "
+            "third positional arg (ServeEngine(cfg, params, policy_params) "
+            "/ Engine(cfg, params, policy_params, config=...)); 'learned' "
+            "params come from repro.train.serve_policy.load_policy()")
     grid = jnp.asarray(rcfg.rank_grid, jnp.int32)
     g_lo, g_hi = int(rcfg.rank_grid[0]), int(rcfg.rank_grid[-1])
     dh = cfg.resolved_head_dim()
@@ -135,7 +146,12 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
             r = lr.rank_for_energy(s2, rcfg.energy_threshold, g_lo, g_hi)
             med = jnp.median(r.astype(jnp.float32))
             chosen = grid[jnp.argmin(jnp.abs(grid.astype(jnp.float32) - med))]
-        elif rcfg.mode == "drrl" and policy_params is not None:
+        elif rcfg.mode in ("drrl", "learned"):
+            # 'learned' is the same device-resident inference path with
+            # params trained offline on serving traces — the trainer
+            # (repro.train.serve_policy) builds its features through this
+            # very recipe (zero h_t/w_t, layer 0, spectra-only ctx), so
+            # checkpointed params transfer without translation
             from repro.core.drrl import build_features
             from repro.core.policy import policy_apply
             h_t = jnp.zeros((1, 8), jnp.float32)
@@ -149,7 +165,7 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
             ok = pert.safety_mask(bounds_rel.reshape(-1, G), eps_t)
             logits = jnp.where(ok, logits, -1e30)
             chosen = grid[jnp.argmax(jnp.mean(logits, axis=0))]
-        else:                                     # 'random' (or drrl w/o pol)
+        else:                                     # 'random'
             # fold BOTH the slot id and its segment clock into the key:
             # folding only t made every slot at the same clock draw the
             # same bucket, and made draws repeat across runs

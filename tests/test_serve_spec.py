@@ -345,3 +345,144 @@ def test_spec_config_validation():
         EngineConfig(draft_rank_frac=0.0)
     with pytest.raises(ValueError, match="snapshot_every"):
         EngineConfig(snapshot_every=0)
+
+
+# ---------------------------------------------------------------------------
+# adaptive draft length (EWMA controller)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_draft_parity_and_stats():
+    """Whatever the EWMA controller does to the draft window, accepts stay
+    exact: adaptive-draft streams are token-identical to plain decode,
+    and stats expose the effective draft length."""
+    cfg = _cfg("adaptive")
+    params = get_model(cfg).init(RNG)
+    prompts = _prompts(cfg)
+    plain, _ = _run(cfg, params, prompts, speculative=False)
+    outs, eng = _run(cfg, params, prompts, speculative=True,
+                     adaptive_draft=True)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(outs[i], plain[i])
+    assert 0 <= eng.stats["eff_draft_k"] <= eng.draft_k
+
+
+def test_adaptive_draft_collapse_routes_plain_decode():
+    """shrink_below > 1 shrinks on every spec step (the EWMA can never
+    clear it): eff_k decays 3 -> 1 -> 0 and decode rides the mixed step
+    with only probe spec steps left. Parity stays exact — the collapsed
+    path is the plain fused step, not an approximation."""
+    cfg = _cfg("adaptive")
+    params = get_model(cfg).init(RNG)
+    prompts = _prompts(cfg)
+    plain, _ = _run(cfg, params, prompts, speculative=False, max_new=24)
+    outs, eng = _run(cfg, params, prompts, speculative=True, max_new=24,
+                     adaptive_draft=True, draft_shrink_below=1.01)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(outs[i], plain[i])
+    assert eng.stats["eff_draft_k"] == 0
+    # collapsed decode steps are NOT spec dispatches (probes excepted)
+    assert eng.stats["spec_steps"] < eng.stats["steps"]
+
+
+def test_adaptive_draft_recovers_from_collapse():
+    """A collapsed window grows back through probe steps: with the grow
+    threshold always met, eff_k climbs 0 -> 2 -> 3 on the probe cadence
+    and the stream still matches plain decode exactly."""
+    cfg = _cfg("adaptive")
+    params = get_model(cfg).init(RNG)
+    prompts = _prompts(cfg)
+    plain, _ = _run(cfg, params, prompts, speculative=False, max_new=24)
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                      segment_len=8, max_new_cap=32, prefill_chunk=8,
+                      speculative=True, draft_k=3, draft_rank_frac=0.5,
+                      adaptive_draft=True, draft_shrink_below=-1.0,
+                      draft_grow_above=-1.0)
+    eng._eff_k = 0                      # start collapsed
+    eng.stats["eff_draft_k"] = 0
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, tokens=p, max_new=24))
+    outs = eng.run()
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(outs[i], plain[i])
+    assert eng.stats["eff_draft_k"] == eng.draft_k
+
+
+def test_adaptive_draft_requires_speculative():
+    cfg = _cfg("off")
+    params = get_model(cfg).init(RNG)
+    with pytest.raises(ValueError, match="adaptive_draft"):
+        ServeEngine(cfg, params, adaptive_draft=True)
+    with pytest.raises(ValueError, match="adaptive_draft"):
+        EngineConfig(adaptive_draft=True)
+
+
+# ---------------------------------------------------------------------------
+# drift-trigger clock under speculation
+# ---------------------------------------------------------------------------
+
+def test_drift_check_once_per_accepted_run_post_accept():
+    """The drift check fires once per fused step (= once per accepted
+    run, NOT once per token) and always against the post-accept
+    position: at call time the host lens mirror has already advanced
+    past every token the verify pass accepted (the cache holds prompt +
+    all emitted tokens but the newest, whose KV lands next dispatch)."""
+    cfg = _cfg("adaptive")
+    params = get_model(cfg).init(RNG)
+    prompts = _prompts(cfg)
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64, page_size=8,
+                      segment_len=8, max_new_cap=32, prefill_chunk=8,
+                      speculative=True, draft_k=3, draft_rank_frac=0.5,
+                      drift_threshold=1e9)
+    calls = []
+    orig = eng._check_drift
+
+    def spy(live):
+        for i in live:
+            st = eng.sched.slots[i]
+            assert (eng.cache.lens[i]
+                    == st.req.tokens.size + st.n_out - 1), \
+                f"slot {i}: drift check saw a pre-accept position"
+        calls.append(list(live))
+        return orig(live)
+
+    eng._check_drift = spy
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, tokens=p, max_new=12))
+    eng.run()
+    # one check per spec dispatch with decoding rows...
+    assert len(calls) == eng.stats["spec_steps"]
+    # ...which is strictly coarser than per-token (accepts ran > 1)
+    assert eng.stats["tokens_decoded"] > len(calls)
+
+
+def test_drift_clock_never_firing_is_bitwise_inert():
+    """A drift threshold no residual can reach must leave streams
+    bitwise identical to running with the trigger off — on the plain
+    path and under speculation alike (the check reads, never writes)."""
+    cfg = _cfg("adaptive")
+    params = get_model(cfg).init(RNG)
+    prompts = _prompts(cfg)
+    base, _ = _run(cfg, params, prompts, speculative=False)
+    for speculative in (False, True):
+        outs, eng = _run(cfg, params, prompts, speculative=speculative,
+                         drift_threshold=1e9)
+        assert not any(eng.force_decide)
+        for i in range(len(prompts)):
+            np.testing.assert_array_equal(outs[i], base[i])
+
+
+def test_drift_trigger_under_speculation_forces_redecision():
+    """drift_threshold=0 re-decides on every accepted run; the decide
+    count must exceed the pure segment schedule's, the re-decision lands
+    at the next step (streams may legally diverge from plain decode —
+    the paper's adaptation clock just got finer), and streams stay
+    valid."""
+    cfg = _cfg("adaptive")
+    params = get_model(cfg).init(RNG)
+    prompts = _prompts(cfg)
+    _, eng_base = _run(cfg, params, prompts, speculative=True)
+    outs, eng = _run(cfg, params, prompts, speculative=True,
+                     drift_threshold=0.0)
+    assert eng.stats["decides"] > eng_base.stats["decides"]
+    for i in range(len(prompts)):
+        assert outs[i].shape == (12,)
