@@ -104,12 +104,27 @@ CHECKS = [
     ("compile_guard.learned_policy.steady_new_executables", "eq_abs", 0,
      "zero new executables across the steady mode='learned' run (the "
      "policy net rides the jitted decide executable)"),
+    ("compile_guard.observability.steady_new_executables", "eq_abs", 0,
+     "metrics + span tracing ON adds zero executables to the steady "
+     "serving loop (repro.obs hooks are pure host Python)"),
     ("compile_guard.mixed_sampling.warm_executables", "max_ratio", 1.0,
      "warmup executable count must not grow past the committed baseline"),
     ("compile_guard.speculative.warm_executables", "max_ratio", 1.0,
      "warmup executable count must not grow past the committed baseline"),
     ("compile_guard.learned_policy.warm_executables", "max_ratio", 1.0,
      "warmup executable count must not grow past the committed baseline"),
+    ("compile_guard.observability.warm_executables", "max_ratio", 1.0,
+     "warmup executable count must not grow past the committed baseline"),
+    # observability overhead lane: parity is a hard gate, the timing
+    # ratio is report-only (host-timer noise at smoke scale)
+    ("obs.parity", "flag", None,
+     "token streams identical with obs tracing enabled vs disabled"),
+    ("obs.on_off_ratio", "info", None,
+     "decode tok/s with tracing on over tracing off (report-only)"),
+    ("obs.trace_events", "info", None,
+     "Chrome trace events recorded for the bench workload"),
+    ("obs.trace_dropped", "eq_abs", 0,
+     "the bench workload must fit the trace ring (no dropped events)"),
 ]
 
 

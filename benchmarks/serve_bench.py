@@ -87,6 +87,44 @@ def compile_guard() -> dict:
     return out
 
 
+def obs_overhead(cfg, params, workload, n_slots: int, max_len: int):
+    """Observability overhead, report-only: the identical workload with
+    span/phase tracing OFF (metrics registry still on — it always is)
+    vs ON. Token parity is asserted; tok/s both ways and the ratio are
+    recorded as ``info`` rows so drift is visible in review without
+    gating CI on sub-millisecond host timing noise."""
+    from repro.serve import Request, ServeEngine
+
+    def drive(obs_trace):
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          page_size=16, segment_len=8,
+                          max_new_cap=max(w["max_new"] for w in workload),
+                          prefill_chunk=8, obs_trace=obs_trace)
+        for w in workload:
+            eng.submit(Request(**w))
+        eng.warmup()
+        outs = eng.run()
+        tok_s = eng.stats["tokens_decoded"] / max(eng.stats["decode_s"], 1e-9)
+        return outs, tok_s, eng
+
+    outs_off, tok_off, _ = drive(False)
+    outs_on, tok_on, eng_on = drive(True)
+    parity = all(np.array_equal(outs_off[w["rid"]], outs_on[w["rid"]])
+                 for w in workload)
+    assert parity, "token streams diverged with obs tracing enabled"
+    doc = eng_on.obs.chrome_trace()
+    snap = eng_on.obs.snapshot()
+    return {
+        "parity": parity,
+        "tok_per_s_off": tok_off,
+        "tok_per_s_on": tok_on,
+        "on_off_ratio": tok_on / max(tok_off, 1e-9),
+        "trace_events": len(doc["traceEvents"]),
+        "trace_dropped": doc["otherData"]["dropped_events"],
+        "ttft_count": snap["metrics"]["serve.ttft_s"]["count"],
+    }
+
+
 def build_workload(n_requests: int, max_new: int, seed: int = 0):
     """Mixed prompt lengths (8..32), arrivals staggered every 2 steps."""
     rnd = np.random.default_rng(seed)
@@ -178,6 +216,11 @@ def chunked_compare(cfg, params, workload, n_slots: int, max_len: int,
         return outs, {
             "ttft_p50_ms": float(np.percentile(ttft, 50)),
             "ttft_p95_ms": float(np.percentile(ttft, 95)),
+            # same TTFTs through the obs histogram (fixed-bucket,
+            # interpolated): the serving-path estimate an exporter
+            # scrape would see, reported beside the exact percentile
+            "ttft_hist_p50_ms": eng.obs.ttft_hist.percentile(50) * 1e3,
+            "ttft_hist_p95_ms": eng.obs.ttft_hist.percentile(95) * 1e3,
             "decode_stall_s": eng.stats["stall_s"],
             "mixed_steps": eng.stats["mixed_steps"],
             "steps": eng.stats["steps"],
@@ -715,6 +758,10 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
                             n_slots=min(n_slots, 4), max_len=max_len,
                             repeats=max(repeats, 2))
 
+    # -- observability overhead: tracing on vs off, parity asserted -----
+    obs_res = obs_overhead(cfg, params, workload, n_slots=min(n_slots, 4),
+                           max_len=max_len)
+
     # -- learned rank policy: trace -> offline train -> replay ----------
     learned_res = learned_policy_compare(cfg, params, smoke=smoke)
 
@@ -733,6 +780,7 @@ def run(quick: bool = False, smoke: bool = False, n_slots: int = 8,
         "prefix_cache": prefix_res,
         "speculative": spec_res,
         "router": router_res,
+        "obs": obs_res,
         "learned_policy": learned_res,
         "compile_guard": guard_res,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -793,6 +841,11 @@ def main():
           f"2-replica {rt['affinity']['tok_per_s']:.0f} tok/s vs "
           f"1-replica {rt['single']['tok_per_s']:.0f} tok/s "
           f"(ratio {rt['tok_per_s_ratio_vs_single']:.2f})")
+    ob = res["obs"]
+    print(f"obs        : parity {ob['parity']}  tok/s on/off ratio "
+          f"{ob['on_off_ratio']:.2f} ({ob['tok_per_s_on']:.0f} traced vs "
+          f"{ob['tok_per_s_off']:.0f} plain); {ob['trace_events']} trace "
+          f"events, {ob['trace_dropped']} dropped")
     lp = res["learned_policy"]
     print(f"learned    : replay valid {lp['replay']['valid']}  reward "
           f"{lp['offline']['learned']['reward']:.4f} vs "
@@ -807,13 +860,16 @@ def main():
     else:
         ms, sp = cg["mixed_sampling"], cg["speculative"]
         lg = cg.get("learned_policy", {})
+        og = cg.get("observability", {})
         print(f"sanitizer  : {'ok' if cg['ok'] else 'FAIL'}  "
               f"transfer guard disallow; executables warm/steady "
               f"{ms['warm_executables']}/+{ms['steady_new_executables']} "
               f"mixed, {sp['warm_executables']}/+"
               f"{sp['steady_new_executables']} speculative, "
               f"{lg.get('warm_executables', '?')}/+"
-              f"{lg.get('steady_new_executables', '?')} learned")
+              f"{lg.get('steady_new_executables', '?')} learned, "
+              f"{og.get('warm_executables', '?')}/+"
+              f"{og.get('steady_new_executables', '?')} obs")
     if res["speedup"] <= 1.0 and not args.smoke:
         # --smoke is a does-it-run canary: 4 under-saturated requests,
         # single repeat — not a throughput measurement

@@ -64,6 +64,23 @@ ATTR_TARGETS: dict[str, tuple[str, str]] = {
     "trace.on_decision": ("serve/traces.py", "TraceRecorder.on_decision"),
     "trace.on_step": ("serve/traces.py", "TraceRecorder.on_step"),
     "trace.on_evict": ("serve/traces.py", "TraceRecorder.on_evict"),
+    # observability hooks off the step loop (always constructed; pure
+    # host Python — see repro.obs.core's module docstring)
+    "obs.step_phases": ("obs/core.py", "Observability.step_phases"),
+    "obs.stats_view": ("obs/core.py", "Observability.stats_view"),
+    "obs.reset_run": ("obs/core.py", "Observability.reset_run"),
+    "obs.on_admit": ("obs/core.py", "Observability.on_admit"),
+    "obs.on_first_token": ("obs/core.py", "Observability.on_first_token"),
+    "obs.on_finish": ("obs/core.py", "Observability.on_finish"),
+    "obs.on_decide": ("obs/core.py", "Observability.on_decide"),
+    "obs.on_drift": ("obs/core.py", "Observability.on_drift"),
+    "obs.on_prefill_chunk": ("obs/core.py", "Observability.on_prefill_chunk"),
+    "obs.on_spec_accept": ("obs/core.py", "Observability.on_spec_accept"),
+    "obs.on_token_latency": ("obs/core.py", "Observability.on_token_latency"),
+    "obs.set_prefix_size": ("obs/core.py", "Observability.set_prefix_size"),
+    "obs.record_event": ("obs/core.py", "Observability.record_event"),
+    "obs.flight_dump": ("obs/core.py", "Observability.flight_dump"),
+    "obs.rank_telemetry": ("obs/core.py", "Observability.rank_telemetry"),
 }
 
 
@@ -126,6 +143,7 @@ LOCK_RULES: tuple[LockRule, ...] = (
             "_maybe_decide": _STEP_LOOP_WHY,
             "_maybe_snapshot": _STEP_LOOP_WHY,
             "_insert_prefix": _STEP_LOOP_WHY,
+            "_stamp_first_token": _STEP_LOOP_WHY,
             "_check_drift": _STEP_LOOP_WHY,
             "_sync_control": _STEP_LOOP_WHY,
             "warmup": _STEP_LOOP_WHY,

@@ -159,13 +159,19 @@ def run_scenario(name: str, *, n_requests: int = 6,
         policy_params = init_policy(jax.random.PRNGKey(1),
                                     feat_dims(cfg.rank), len(grid))
 
-    sampling = name == "mixed_sampling"
+    # the observability scenario is the mixed-sampling workload with
+    # metrics + span/phase tracing ON: it must add ZERO new executables
+    # and ZERO unsanctioned transfers relative to a bare steady loop —
+    # the repro.obs contract that hooks are pure host Python
+    sampling = name in ("mixed_sampling", "observability")
     kwargs = dict(n_slots=4, max_len=64, page_size=16, segment_len=8,
                   max_new_cap=max_new, prefill_chunk=8)
     if sampling:
         kwargs.update(sampling=True, nucleus=True)
     elif name == "speculative":
         kwargs.update(speculative=True, draft_k=3, draft_rank_frac=0.25)
+    if name == "observability":
+        kwargs.update(obs_trace=True)
 
     counter = CompileCounter()
     with counter.attached():
@@ -185,6 +191,15 @@ def run_scenario(name: str, *, n_requests: int = 6,
         for w in _workload(n_requests, max_new, seed=7, sampling=sampling):
             eng.submit(Request(**w))
         eng.run()
+        if name == "observability":
+            # the export/read side must be as quiet as the hooks: render
+            # every exporter inside the counted steady region (the one
+            # device read — rank_telemetry's batched veto fetch — is a
+            # plain device_get, never a compile)
+            eng.obs.snapshot()
+            eng.obs.prometheus()
+            eng.obs.chrome_trace()
+            eng.obs.rank_telemetry(eng)
         steady = counter.count - warm
 
     return {
@@ -205,13 +220,13 @@ def main(argv=None) -> int:
                     help="emit the result dict as JSON on stdout")
     ap.add_argument("--scenario",
                     choices=["mixed_sampling", "speculative",
-                             "learned_policy"],
+                             "learned_policy", "observability"],
                     action="append",
                     help="run only the named scenario(s); default all")
     args = ap.parse_args(argv)
 
     scenarios = args.scenario or ["mixed_sampling", "speculative",
-                                  "learned_policy"]
+                                  "learned_policy", "observability"]
     results = []
     failed = False
     for name in scenarios:

@@ -114,7 +114,16 @@ class EngineConfig:
     path: per-segment decision features and outcomes land in versioned
     npz shards for offline policy training
     (``repro.train.serve_policy``); call ``engine.core.trace.flush()``
-    when serving is done."""
+    when serving is done.
+
+    ``obs_trace=True`` turns on :mod:`repro.obs` span/phase tracing
+    (per-request spans + per-step phase timeline, exported as Chrome
+    trace-event JSON via ``engine.obs.chrome_trace()``); the metrics
+    registry itself is always on and costs the loop nothing beyond the
+    host-side counter adds it already did. ``flight_dir=<dir>`` enables
+    flight-recorder dumps: a bounded ring of recent engine events is
+    written there on step exceptions, front-end shutdown and
+    ``reset()`` with requests still in flight."""
     n_slots: int = 4
     max_len: int = 256
     page_size: int = 16
@@ -139,8 +148,14 @@ class EngineConfig:
     draft_shrink_below: float = 0.35
     draft_grow_above: float = 0.6
     record_traces: Optional[str] = None
+    obs_trace: bool = False
+    flight_dir: Optional[str] = None
+    flight_capacity: int = 256
 
     def __post_init__(self):
+        if self.flight_capacity < 1:
+            raise ValueError(f"flight_capacity must be >= 1, got "
+                             f"{self.flight_capacity}")
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
@@ -367,7 +382,8 @@ class Engine:
             adaptive_draft=c.adaptive_draft,
             draft_shrink_below=c.draft_shrink_below,
             draft_grow_above=c.draft_grow_above,
-            record_traces=c.record_traces)
+            record_traces=c.record_traces, obs_trace=c.obs_trace,
+            flight_dir=c.flight_dir, flight_capacity=c.flight_capacity)
         self._handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._finished_seen = 0
@@ -549,6 +565,10 @@ class Engine:
         never come), and the thread's next step() sees an empty engine
         and parks."""
         with self._step_lock, self._submit_lock:
+            stranded = sum(1 for h in self._handles.values() if not h.done)
+            if stranded:
+                # post-mortem breadcrumb before the state is torn down
+                self.core.obs.flight_dump("reset_with_live_requests")
             for h in self._handles.values():
                 h._mark_stopped()
             self.core.reset()
@@ -570,6 +590,12 @@ class Engine:
     @property
     def stats(self) -> Dict:
         return self.core.stats
+
+    @property
+    def obs(self):
+        """The core engine's :class:`repro.obs.Observability` bundle
+        (metrics registry, span tracer, flight recorder, exporters)."""
+        return self.core.obs
 
     @property
     def depth(self) -> int:

@@ -49,9 +49,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import get_model
+from repro.obs import NULL_PHASES, Observability, Stopwatch
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.policy import basis_drift, make_decide_fn
 from repro.serve.prefix import MatchResult, PrefixCache
+from repro.serve.spec import host_accept_stats
 from repro.serve.scheduler import (Request, Scheduler, bucket_for,
                                    prefill_buckets)
 
@@ -83,7 +85,10 @@ class ServeEngine:
                  adaptive_draft: bool = False,
                  draft_shrink_below: float = 0.35,
                  draft_grow_above: float = 0.6,
-                 record_traces: Optional[str] = None):
+                 record_traces: Optional[str] = None,
+                 obs_trace: bool = False,
+                 flight_dir: Optional[str] = None,
+                 flight_capacity: int = 256):
         self.cfg, self.params, self.policy = cfg, params, policy_params
         self.seg = int(segment_len or cfg.rank.segment_len)
         self.n_slots = n_slots
@@ -141,6 +146,13 @@ class ServeEngine:
             self.trace = (record_traces
                           if isinstance(record_traces, TraceRecorder)
                           else TraceRecorder(record_traces, cfg))
+        # observability bundle (repro.obs): the metrics registry shard is
+        # always on (every stat below lives in it, via the StatsView);
+        # span/phase tracing (obs_trace) and flight dumps (flight_dir)
+        # are opt-in. Every hook the loop calls is host-only Python —
+        # observability ON adds no device syncs and no executables.
+        self.obs = Observability(trace=obs_trace, flight_dir=flight_dir,
+                                 flight_capacity=flight_capacity)
         self.spec_chunk = (max(self.chunk, self.draft_k + 1)
                            if self.speculative else None)
         # sampling=True compiles the temperature/top-k/gumbel tail into the
@@ -257,15 +269,26 @@ class ServeEngine:
         self._snaps: Dict[int, Dict[int, Optional[jnp.ndarray]]] = {}
         self._spectra_pending: Dict[int, object] = {}
         self.request_prefix_hit: Dict[int, bool] = {}
-        self.stats = {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
-                      "steps": 0, "tokens_decoded": 0, "prefills": 0,
-                      "decides": 0, "mixed_steps": 0, "stall_s": 0.0,
-                      "prefill_tokens": 0, "prefix_hits": 0,
-                      "prefix_misses": 0, "prefix_reused_tokens": 0,
-                      "prefix_cow": 0, "prefix_evictions": 0,
-                      "spec_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0, "spec_tokens": 0,
-                      "eff_draft_k": self.draft_k if self.speculative else 0}
+        # the historical stats dict as a view over the obs registry: same
+        # keys, same dict semantics (reads, += writes, dict() copies),
+        # but the registry is the single accumulation point and the
+        # exporters see these values for free. Re-binding zeroes the
+        # backing metrics — the old "fresh dict per reset" semantics.
+        self.stats = self.obs.stats_view(
+            {"compile_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
+             "steps": 0, "tokens_decoded": 0, "prefills": 0,
+             "decides": 0, "mixed_steps": 0, "stall_s": 0.0,
+             "prefill_tokens": 0, "prefix_hits": 0,
+             "prefix_misses": 0, "prefix_reused_tokens": 0,
+             "prefix_cow": 0, "prefix_evictions": 0,
+             "spec_steps": 0, "spec_drafted": 0,
+             "spec_accepted": 0, "spec_tokens": 0,
+             "eff_draft_k": self.draft_k if self.speculative else 0})
+        self.obs.reset_run()
+        # per-decision Eq. 9 veto flags, banked as UNFETCHED device bools
+        # — obs.rank_telemetry() fetches them in one batch at export
+        # time, so veto observability costs the loop nothing (R1)
+        self._veto_pending: List[jnp.ndarray] = []
         # adaptive-draft controller state (host-only; never traced)
         self._eff_k = self.draft_k if self.speculative else 0
         self._accept_ewma = 1.0
@@ -361,6 +384,7 @@ class ServeEngine:
                         self.request_accept_lens[rid] = list(st.accept_lens)
                     if self.trace is not None:
                         self.trace.on_evict(i)
+                    self.obs.on_finish(rid, i, st.n_out, "cancel")
                     self.sched.evict(i, self.cache.release, outputs)
                     # a mid-prefill cancel leaves no prefix insertion and
                     # no pending spectra capture for this slot
@@ -403,7 +427,7 @@ class ServeEngine:
         """Compile (and run once, results discarded) every executable the
         queued requests will need; the elapsed time lands in
         stats['compile_s'] so throughput numbers stay compile-free."""
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         ns = self.n_slots
         if self.chunk is None:
             need = {bucket_for(len(r.tokens), self._buckets)
@@ -418,8 +442,9 @@ class ServeEngine:
             # donated args (basis/spectra/kt) must be re-captured; the
             # warm decision runs on the empty slot 0 whose state the
             # admission-time re-decision overwrites before any read
+            # (the warm veto flag is meaningless and not banked)
             (self.cache.ranks, self.cache.basis, self.cache.spectra,
-             self.cache.kt_pool) = self._decide(
+             self.cache.kt_pool, _veto) = self._decide(
                 self.cache.k_pool, self.cache.mass_pool, self.cache.kt_pool,
                 self._pt_dev, self._lens_dev, self.cache.ranks,
                 self.cache.basis, self.cache.spectra,
@@ -454,25 +479,23 @@ class ServeEngine:
             self._adopt_pools(pools)
             self.out_buf = ob
             jax.block_until_ready(tok)
-            dt = time.perf_counter() - t0
-            self.stats["compile_s"] += dt
-            return dt
-        runs = [(self._step, ())] + (
-            [(self._step_mixed, (self.prompt_buf,))]
-            if self._step_mixed is not None else [])
-        for fn, extra in runs:
-            pools, tok, ob, _ = fn(
-                self.params, self.cache.k_pool, self.cache.v_pool,
-                self.cache.kt_pool, self.cache.mass_pool,
-                self._pt_dev, self.tokens, self._lens_dev,
-                self.cache.ranks, self.cache.basis,
-                jnp.zeros((ns,), bool), self.out_buf,
-                self._plen_dev, self._temp_dev, self._topk_dev,
-                self._topp_dev, self._seed_dev, *extra)
-            self._adopt_pools(pools)
-            self.out_buf = ob
-            jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
+        else:
+            runs = [(self._step, ())] + (
+                [(self._step_mixed, (self.prompt_buf,))]
+                if self._step_mixed is not None else [])
+            for fn, extra in runs:
+                pools, tok, ob, _ = fn(
+                    self.params, self.cache.k_pool, self.cache.v_pool,
+                    self.cache.kt_pool, self.cache.mass_pool,
+                    self._pt_dev, self.tokens, self._lens_dev,
+                    self.cache.ranks, self.cache.basis,
+                    jnp.zeros((ns,), bool), self.out_buf,
+                    self._plen_dev, self._temp_dev, self._topk_dev,
+                    self._topp_dev, self._seed_dev, *extra)
+                self._adopt_pools(pools)
+                self.out_buf = ob
+                jax.block_until_ready(tok)
+        dt = sw.stop()
         self.stats["compile_s"] += dt
         return dt
 
@@ -846,8 +869,14 @@ class ServeEngine:
                 m = self._apply_prefix_hit(slot, req)
                 self._snaps[slot] = {}
                 self.stats["prefill_tokens"] += st.prompt_len - m
+                self.obs.on_admit(req.rid, slot, st.prompt_len, reused=m,
+                                  queued=len(self.sched.pending),
+                                  live=self.sched.n_live())
                 continue
-            t0 = time.perf_counter()
+            self.obs.on_admit(req.rid, slot, st.prompt_len,
+                              queued=len(self.sched.pending),
+                              live=self.sched.n_live())
+            sw = Stopwatch()
             s = len(req.tokens)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :s] = req.tokens
@@ -869,7 +898,6 @@ class ServeEngine:
             self.tokens = self.tokens.at[slot, 0].set(tok0)
             self.out_buf = self.out_buf.at[slot, 0].set(tok0)
             st.prefilled = s
-            st.n_out = 1
             if req.eos_id is not None:
                 st.last_tok = int(tok0)
             if self._stream_sync:
@@ -877,19 +905,28 @@ class ServeEngine:
                 # a streaming consumer must still see it in order
                 self.last_emitted.append((req.rid, 0, int(tok0)))
             jax.block_until_ready(self.cache.k_pool)
-            dt = time.perf_counter() - t0
+            dt = sw.stop()
             self.stats["prefill_s"] += dt
-            self.stats["prefills"] += 1
             self.stats["prefill_tokens"] += s
             if any_other_live:
                 # blocking admission: this prefill ran while other streams
                 # had decode work pending — the stall chunked mode removes
                 self.stats["stall_s"] += dt
-            st.latencies.append(dt)               # first-token latency
-            self.request_first_tok_t[req.rid] = time.perf_counter()
+            self._stamp_first_token(slot, st, time.perf_counter(), dt)
         if placed:
             self._dirty = True
         return [slot for slot, _, _ in placed]
+
+    def _stamp_first_token(self, i: int, st, now_t: float,
+                           ttft_s: float) -> None:
+        """Shared first-token bookkeeping for the three prefill-completion
+        paths (one-shot admission, chunked mixed step, chunked spec
+        step): output count, TTFT latency, stats, and the obs hook."""
+        st.n_out = 1                              # token 0 emitted
+        st.latencies.append(ttft_s)               # first-token latency
+        self.stats["prefills"] += 1
+        self.request_first_tok_t[st.req.rid] = now_t
+        self.obs.on_first_token(st.req.rid, i, ttft_s)
 
     def _maybe_decide(self) -> None:
         if self._decide is None:
@@ -913,14 +950,21 @@ class ServeEngine:
         for i in np.nonzero(boundary)[0]:
             st = self.sched.slots[i]
             first = not self.has_rank[i]
+            forced = bool(self.force_decide[i])
             (self.cache.ranks, self.cache.basis, self.cache.spectra,
-             self.cache.kt_pool) = self._decide(
+             self.cache.kt_pool, vetoed) = self._decide(
                 self.cache.k_pool, self.cache.mass_pool, self.cache.kt_pool,
                 self._pt_dev, self._lens_dev, self.cache.ranks,
                 self.cache.basis, self.cache.spectra, np.int32(i),
                 np.bool_(self.has_rank[i]), np.int32(st.t))
+            # the Eq. 9 veto flag is a device bool: bank it UNFETCHED —
+            # obs.rank_telemetry() reads the whole batch in one
+            # device_get at export time, so veto telemetry adds no sync
+            # to the loop
+            self._veto_pending.append(vetoed)
             st.t += 1
             self.stats["decides"] += 1
+            self.obs.on_decide(int(i), st.t - 1, forced=forced)
             if self.trace is not None:
                 s2_h, rank_h = jax.device_get(  # inv-ok[R1]: trace recording fetches the decision's spectra/rank once per segment boundary (the decide cadence), never per decode step
                     (self.cache.spectra[i], self.cache.ranks[i]))
@@ -967,6 +1011,7 @@ class ServeEngine:
         for i in live:
             if self.has_rank[i] and drift[i] > self.drift_threshold:
                 self.force_decide[i] = True
+                self.obs.on_drift(int(i), float(drift[i]))
 
     def _maybe_snapshot(self, i: int, st, done_pf: bool) -> None:
         """Capture a cumulative-mass snapshot for the prefix cache. The
@@ -998,10 +1043,15 @@ class ServeEngine:
             self._snaps.pop(i, {}))
         if node is not None and self._decide is not None:
             self._spectra_pending[i] = node
+        # gauge cadence: once per finished prompt (pages counted as
+        # distinct physical ids — COW shares collapse)
+        self.obs.set_prefix_size(
+            self.prefix.n_nodes, len(set(self.prefix.all_pages())))
 
-    def _step_live_spec(self, live: List[int]) -> None:
+    def _step_live_spec(self, live: List[int], ph=NULL_PHASES) -> None:
         """Host side of one speculative engine iteration (the fused body
-        is _step_spec_impl). Differs from the plain path in three ways:
+        is _step_spec_impl). ``ph`` is the step's phase recorder (a no-op
+        unless obs tracing is on). Differs from the plain path in three ways:
         decode rows advance by their accepted run length ``a`` (1..
         draft_k + 1) instead of 1; the per-step accept/emission fetch IS
         the token stream (handles get every accepted token, not just the
@@ -1014,8 +1064,9 @@ class ServeEngine:
         decoding = [i for i in live if not slots[i].mid_prefill]
         q_host = {i: min(self.spec_chunk, slots[i].prompt_len
                          - slots[i].prefilled) for i in mid}
-        t0 = time.perf_counter() if self.time_per_token else None
-        self._maybe_decide()
+        sw = Stopwatch(self.time_per_token)
+        with ph("decide"):
+            self._maybe_decide()
         if self.cache.factored and decoding:
             assert all(self.has_rank[i] for i in decoding), \
                 "factored slot would read unseeded kt pages"
@@ -1026,83 +1077,87 @@ class ServeEngine:
                 # admission) — rollback never rewinds into shared state
                 assert self.cache.lens[i] >= self.cache.shared_floor(i), \
                     f"slot {i}: speculative write below shared-page floor"
-        self._sync_control()
-        active_dec = np.array([s.active and not s.mid_prefill
-                               for s in self.sched.slots])
-        self.rank_history.append(
-            (self.stats["steps"], self.cache.ranks, active_dec))
-        # adaptive draft: the accept cap honours the controller's current
-        # effective draft length (>= 1 here — a fully collapsed stream
-        # only reaches this path on recovery-probe steps)
-        k_eff = (max(self._eff_k, 1) if self.adaptive_draft
-                 else self.draft_k)
-        caps = np.ones((self.n_slots,), np.int32)
-        for i in decoding:
-            st = slots[i]
-            c = min(k_eff + 1, st.req.max_new - st.n_out)
-            if self._decide is not None:
-                c = min(c, self.seg - st.decode_i % self.seg)
-            caps[i] = max(c, 1)
-        pools, tok, ob, lens, acc, n_emit, emitted = self._step_spec(
-            self.params, self.cache.k_pool, self.cache.v_pool,
-            self.cache.kt_pool, self.cache.mass_pool,
-            self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
-            self.cache.basis, self._active_dev, self.out_buf,
-            self._plen_dev, self._temp_dev, self._topk_dev,
-            self._topp_dev, self._seed_dev, self.prompt_buf,
-            self.cache.spectra, jnp.asarray(caps), self._eos_dev)
-        self._adopt_pools(pools)
-        self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
+        with ph("dispatch"):
+            self._sync_control()
+            active_dec = np.array([s.active and not s.mid_prefill
+                                   for s in self.sched.slots])
+            self.rank_history.append(
+                (self.stats["steps"], self.cache.ranks, active_dec))
+            # adaptive draft: the accept cap honours the controller's
+            # current effective draft length (>= 1 here — a fully
+            # collapsed stream only reaches this path on recovery-probe
+            # steps)
+            k_eff = (max(self._eff_k, 1) if self.adaptive_draft
+                     else self.draft_k)
+            caps = np.ones((self.n_slots,), np.int32)
+            for i in decoding:
+                st = slots[i]
+                c = min(k_eff + 1, st.req.max_new - st.n_out)
+                if self._decide is not None:
+                    c = min(c, self.seg - st.decode_i % self.seg)
+                caps[i] = max(c, 1)
+            pools, tok, ob, lens, acc, n_emit, emitted = self._step_spec(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                self.cache.kt_pool, self.cache.mass_pool,
+                self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
+                self.cache.basis, self._active_dev, self.out_buf,
+                self._plen_dev, self._temp_dev, self._topk_dev,
+                self._topp_dev, self._seed_dev, self.prompt_buf,
+                self.cache.spectra, jnp.asarray(caps), self._eos_dev)
+            self._adopt_pools(pools)
+            self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
         # the accept fetch doubles as the emission sync: streaming handles
         # need every accepted token this step anyway, so this is the same
         # one-host-sync-per-step budget as the plain path's tok fetch
-        acc_h, emit_h = jax.device_get((acc, emitted))  # inv-ok[R1]: the one sanctioned per-step sync — the accept/emission fetch doubles as the streaming emit
-        dt = (time.perf_counter() - t0) if self.time_per_token else None
+        with ph("fetch"):
+            acc_h, emit_h = jax.device_get((acc, emitted))  # inv-ok[R1]: the one sanctioned per-step sync — the accept/emission fetch doubles as the streaming emit
+        dt = sw.stop()
         now_t = time.perf_counter()
-        for i in live:
-            st = slots[i]
-            if i in q_host:                       # mid-prefill row
-                q = q_host[i]
-                st.prefilled += q
-                self.cache.lens[i] += q           # host mirror of _lens_dev
-                done_pf = st.prefilled == st.prompt_len
-                self._maybe_snapshot(i, st, done_pf)
-                if done_pf:
-                    st.n_out = 1                  # token 0 emitted this step
-                    st.latencies.append(now_t - st.admit_s)   # TTFT
-                    self.stats["prefills"] += 1
-                    self.request_first_tok_t[st.req.rid] = now_t
-                    st.last_tok = int(emit_h[i, 0])
-                    self.last_emitted.append(
-                        (st.req.rid, 0, int(emit_h[i, 0])))
-                    self._insert_prefix(i, st)
-                continue
-            a = int(acc_h[i])
-            base = st.n_out
-            st.decode_i += a
-            st.n_out += a
-            self.cache.lens[i] += a               # host mirror of _lens_dev
-            st.accept_lens.append(a)
-            if self.trace is not None:
-                self.trace.on_step(i, a, dt, accepted=a - 1,
-                                   drafted=int(caps[i]) - 1)
-            st.last_tok = int(emit_h[i, a - 1])
-            self.last_emitted.extend(
-                (st.req.rid, base + t, int(emit_h[i, t])) for t in range(a))
-            if dt is not None:
-                st.latencies.extend([dt / a] * a)
+        with ph("deliver"):
+            for i in live:
+                st = slots[i]
+                if i in q_host:                   # mid-prefill row
+                    q = q_host[i]
+                    st.prefilled += q
+                    self.cache.lens[i] += q       # host mirror of _lens_dev
+                    done_pf = st.prefilled == st.prompt_len
+                    self._maybe_snapshot(i, st, done_pf)
+                    self.obs.on_prefill_chunk(i, st.req.rid, q, st.prefilled)
+                    if done_pf:
+                        self._stamp_first_token(i, st, now_t,
+                                                now_t - st.admit_s)
+                        st.last_tok = int(emit_h[i, 0])
+                        self.last_emitted.append(
+                            (st.req.rid, 0, int(emit_h[i, 0])))
+                        self._insert_prefix(i, st)
+                    continue
+                a = int(acc_h[i])
+                base = st.n_out
+                st.decode_i += a
+                st.n_out += a
+                self.cache.lens[i] += a           # host mirror of _lens_dev
+                st.accept_lens.append(a)
+                self.obs.on_spec_accept(i, a, int(caps[i]) - 1)
+                if self.trace is not None:
+                    self.trace.on_step(i, a, dt, accepted=a - 1,
+                                       drafted=int(caps[i]) - 1)
+                st.last_tok = int(emit_h[i, a - 1])
+                self.last_emitted.extend(
+                    (st.req.rid, base + t, int(emit_h[i, t]))
+                    for t in range(a))
+                if dt is not None:
+                    st.latencies.extend([dt / a] * a)
+                    for _ in range(a):
+                        self.obs.on_token_latency(dt / a)
         self.stats["steps"] += 1
         if decoding:
+            tot, n_acc, n_drafted = host_accept_stats(
+                acc_h, caps, decoding, self.draft_k)
             self.stats["spec_steps"] += 1
-            tot = sum(int(acc_h[i]) for i in decoding)
             self.stats["tokens_decoded"] += tot
             self.stats["spec_tokens"] += tot
-            self.stats["spec_accepted"] += sum(
-                int(acc_h[i]) - 1 for i in decoding)
-            # drafts that COULD be accepted this step (caps clamp near
-            # max_new / segment boundaries) — keeps the rate unbiased
-            self.stats["spec_drafted"] += sum(
-                min(self.draft_k, int(caps[i]) - 1) for i in decoding)
+            self.stats["spec_accepted"] += n_acc
+            self.stats["spec_drafted"] += n_drafted
         if self.adaptive_draft and decoding:
             denom = sum(int(caps[i]) - 1 for i in decoding)
             if denom > 0:
@@ -1133,15 +1188,22 @@ class ServeEngine:
                     self.request_accept_lens[st.req.rid] = list(st.accept_lens)
                 if self.trace is not None:
                     self.trace.on_evict(i)
+                reason = ("eos" if (st.req.eos_id is not None
+                                    and st.last_tok == st.req.eos_id)
+                          else "max_new")
+                self.obs.on_finish(st.req.rid, i, st.n_out, reason)
                 self.sched.evict(i, self.cache.release, outputs)
                 self._dirty = True
 
     def step(self) -> None:
         """One engine iteration: admit -> decide -> fused decode -> evict."""
         self.last_emitted = []
-        self._admit()                             # may emit tok0 (one-shot)
-        self._evict_finished()                    # max_new == 1 / instant EOS
-        live = [i for i, s in enumerate(self.sched.slots) if s.active]
+        ph = self.obs.step_phases(self.stats["steps"])
+        with ph("admit"):
+            self._admit()                         # may emit tok0 (one-shot)
+        with ph("schedule"):
+            self._evict_finished()                # max_new == 1 / instant EOS
+            live = [i for i, s in enumerate(self.sched.slots) if s.active]
         if live and self.speculative and any(
                 not self.sched.slots[i].mid_prefill for i in live):
             # at least one row has a token to extend; pure-prefill steps
@@ -1156,7 +1218,7 @@ class ServeEngine:
                 spec_now = self._probe_i % self._DRAFT_PROBE_EVERY == 0
                 self._probe_i += 1
             if spec_now:
-                self._step_live_spec(live)
+                self._step_live_spec(live, ph)
                 live = []
         if live:
             slots = self.sched.slots
@@ -1171,8 +1233,9 @@ class ServeEngine:
                          == slots[i].prompt_len]
             # the timer starts before the segment decision: tokens decoded
             # in a boundary step really do wait on the decide dispatch
-            t0 = time.perf_counter() if self.time_per_token else None
-            self._maybe_decide()
+            sw = Stopwatch(self.time_per_token)
+            with ph("decide"):
+                self._maybe_decide()
             if self.cache.factored and decoding:
                 # a factored slot's kt pages are only consistent after its
                 # first decision re-projects them; decode_i == 0 is always
@@ -1181,67 +1244,71 @@ class ServeEngine:
                 # read dense K, so they are exempt.
                 assert all(self.has_rank[i] for i in decoding), \
                     "factored slot would read unseeded kt pages"
-            self._sync_control()
-            active_dec = np.array([s.active and not s.mid_prefill
-                                   for s in self.sched.slots])
-            self.rank_history.append(
-                (self.stats["steps"], self.cache.ranks, active_dec))
-            # a speculative engine never warms the plain decode step (its
-            # decode-only shape rides _step_mixed with q_lens == 1), so a
-            # collapsed adaptive draft must route through the mixed step
-            # too — dispatching _step here would compile in steady state
-            use_mixed = bool(mid) or self.speculative
-            step_fn = self._step_mixed if use_mixed else self._step
-            extra = (self.prompt_buf,) if use_mixed else ()
-            pools, tok, ob, lens = step_fn(
-                self.params, self.cache.k_pool, self.cache.v_pool,
-                self.cache.kt_pool, self.cache.mass_pool,
-                self._pt_dev, self.tokens, self._lens_dev, self.cache.ranks,
-                self.cache.basis, self._active_dev, self.out_buf,
-                self._plen_dev, self._temp_dev, self._topk_dev,
-                self._topp_dev, self._seed_dev, *extra)
-            self._adopt_pools(pools)
-            self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
-            dt = None
-            if self.time_per_token:
-                jax.block_until_ready(tok)  # inv-ok[R1]: opt-in timing mode deliberately syncs to attribute per-step latency
-                dt = time.perf_counter() - t0
+            with ph("dispatch"):
+                self._sync_control()
+                active_dec = np.array([s.active and not s.mid_prefill
+                                       for s in self.sched.slots])
+                self.rank_history.append(
+                    (self.stats["steps"], self.cache.ranks, active_dec))
+                # a speculative engine never warms the plain decode step
+                # (its decode-only shape rides _step_mixed with
+                # q_lens == 1), so a collapsed adaptive draft must route
+                # through the mixed step too — dispatching _step here
+                # would compile in steady state
+                use_mixed = bool(mid) or self.speculative
+                step_fn = self._step_mixed if use_mixed else self._step
+                extra = (self.prompt_buf,) if use_mixed else ()
+                pools, tok, ob, lens = step_fn(
+                    self.params, self.cache.k_pool, self.cache.v_pool,
+                    self.cache.kt_pool, self.cache.mass_pool,
+                    self._pt_dev, self.tokens, self._lens_dev,
+                    self.cache.ranks, self.cache.basis, self._active_dev,
+                    self.out_buf, self._plen_dev, self._temp_dev,
+                    self._topk_dev, self._topp_dev, self._seed_dev, *extra)
+                self._adopt_pools(pools)
+                self.tokens, self.out_buf, self._lens_dev = tok, ob, lens
+                if self.time_per_token:
+                    jax.block_until_ready(tok)  # inv-ok[R1]: opt-in timing mode deliberately syncs to attribute per-step latency
+            dt = sw.stop()
             emitting = decoding + finishing
             need_tok = (self._stream_sync and emitting) or any(
                 self.sched.slots[i].req.eos_id is not None for i in emitting)
-            tok_host = np.asarray(tok[:, 0]) if need_tok else None  # inv-ok[R1]: the plain path's one sanctioned per-step sync — EOS detection and streaming need this step's token
+            with ph("fetch"):
+                tok_host = np.asarray(tok[:, 0]) if need_tok else None  # inv-ok[R1]: the plain path's one sanctioned per-step sync — EOS detection and streaming need this step's token
             now_t = time.perf_counter()
-            for i in live:
-                st = self.sched.slots[i]
-                if i in q_host:                   # mid-prefill row
-                    q = q_host[i]
-                    st.prefilled += q
-                    self.cache.lens[i] += q       # host mirror of _lens_dev
-                    done_pf = st.prefilled == st.prompt_len
-                    self._maybe_snapshot(i, st, done_pf)
-                    if done_pf:
-                        st.n_out = 1              # token 0 emitted this step
-                        st.latencies.append(now_t - st.admit_s)   # TTFT
-                        self.stats["prefills"] += 1
-                        self.request_first_tok_t[st.req.rid] = now_t
-                        if tok_host is not None:
-                            st.last_tok = int(tok_host[i])
-                        self._insert_prefix(i, st)
-                    continue
-                st.decode_i += 1
-                st.n_out += 1
-                self.cache.lens[i] += 1           # host mirror of _lens_dev
-                if self.trace is not None:
-                    self.trace.on_step(i, 1, dt)
+            with ph("deliver"):
+                for i in live:
+                    st = self.sched.slots[i]
+                    if i in q_host:               # mid-prefill row
+                        q = q_host[i]
+                        st.prefilled += q
+                        self.cache.lens[i] += q   # host mirror of _lens_dev
+                        done_pf = st.prefilled == st.prompt_len
+                        self._maybe_snapshot(i, st, done_pf)
+                        self.obs.on_prefill_chunk(i, st.req.rid, q,
+                                                  st.prefilled)
+                        if done_pf:
+                            self._stamp_first_token(i, st, now_t,
+                                                    now_t - st.admit_s)
+                            if tok_host is not None:
+                                st.last_tok = int(tok_host[i])
+                            self._insert_prefix(i, st)
+                        continue
+                    st.decode_i += 1
+                    st.n_out += 1
+                    self.cache.lens[i] += 1       # host mirror of _lens_dev
+                    if self.trace is not None:
+                        self.trace.on_step(i, 1, dt)
+                    if tok_host is not None:
+                        st.last_tok = int(tok_host[i])
+                    if dt is not None:
+                        st.latencies.append(dt)
+                        self.obs.on_token_latency(dt)
                 if tok_host is not None:
-                    st.last_tok = int(tok_host[i])
-                if dt is not None:
-                    st.latencies.append(dt)
-            if tok_host is not None:
-                self.last_emitted.extend(
-                    (self.sched.slots[i].req.rid,
-                     self.sched.slots[i].n_out - 1, int(tok_host[i]))
-                    for i in emitting)
+                    self.last_emitted.extend(
+                        (self.sched.slots[i].req.rid,
+                         self.sched.slots[i].n_out - 1, int(tok_host[i]))
+                        for i in emitting)
             self.stats["steps"] += 1
             self.stats["tokens_decoded"] += len(decoding)
             if mid:
@@ -1255,7 +1322,7 @@ class ServeEngine:
         """Drive the loop until every request finished. Returns
         {rid: np.ndarray of generated tokens}."""
         p0 = self.stats["prefill_s"]
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         steps = 0
         while not self.sched.done():
             self.step()
@@ -1263,7 +1330,7 @@ class ServeEngine:
             if max_steps is not None and steps >= max_steps:
                 break
         jax.block_until_ready(self.out_buf)  # inv-ok[R1]: end-of-run drain before the wall clock is read
-        wall = time.perf_counter() - t0
+        wall = sw.stop()
         self.stats["decode_s"] += max(
             wall - (self.stats["prefill_s"] - p0), 0.0)
         return self.results()

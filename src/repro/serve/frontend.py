@@ -51,6 +51,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs import aggregate
 from repro.serve.api import (Engine, EngineConfig, EngineStopped,
                              RequestHandle, SamplingParams)
 
@@ -148,6 +149,10 @@ class FrontEnd:
             # never die silently — record the error, strand no consumer
             except BaseException as e:
                 self._error = e
+                # dump the flight ring first: the crash context (the
+                # events leading up to the failing step) must land on
+                # disk before handles observe EngineStopped
+                self.engine.core.obs.flight_dump("step_exception", error=e)
                 self._abort_handles()
                 with self._idle_cv:
                     self._idle_cv.notify_all()
@@ -218,6 +223,10 @@ class FrontEnd:
         self._stop.set()
         self._wake.set()
         self._thread.join(timeout=30.0)
+        # last-breath state (only when a dump dir is configured; a step
+        # exception already dumped — this records the shutdown marker)
+        self.engine.core.obs.record_event("shutdown")
+        self.engine.core.obs.flight_dump("shutdown")
         self._abort_handles()
 
     def _abort_handles(self) -> None:
@@ -381,3 +390,23 @@ class Router:
             "routed": list(self.routed),
             "route_kinds": dict(self.route_kinds),
         }
+
+    def obs_snapshot(self) -> Dict:
+        """Fleet-level metrics rollup: every replica's registry shard
+        merged at read time (counters/gauges sum, histograms merge
+        bucket-wise), plus the per-replica snapshots. Read-side only —
+        no replica lock is taken and no step loop is touched."""
+        per = [fe.engine.obs.snapshot() for fe in self.replicas]
+        return {
+            "fleet": aggregate([fe.engine.obs.registry
+                                for fe in self.replicas]),
+            "replicas": per,
+        }
+
+    def prometheus(self, namespace: str = "repro") -> str:
+        """Prometheus text exposition for the whole fleet (merged
+        registries; one scrape endpoint per router)."""
+        from repro.obs.metrics import aggregate_registry
+        merged = aggregate_registry([fe.engine.obs.registry
+                                     for fe in self.replicas])
+        return merged.prometheus_text(namespace)

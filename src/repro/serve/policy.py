@@ -56,7 +56,7 @@ from repro.core import perturbation as pert
 def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
     """Returns jitted ``decide(k_pool, mass_pool, kt_pool, page_table,
     lens, ranks, basis, spectra, slot, has_rank, t) -> (ranks', basis',
-    spectra', kt_pool')``.
+    spectra', kt_pool', vetoed)``.
 
     One call re-decides ONE slot (``slot`` is a traced scalar index — a
     single executable serves every slot): it gathers that slot's K and
@@ -74,7 +74,10 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
     instead of n_slots times the union.
 
     ``kt_pool`` may be None (dense-K serving): the returned kt_pool is
-    then None as well.
+    then None as well. ``vetoed`` is a device bool scalar — True iff the
+    Eq. 9 transition veto overrode the policy's choice this call. The
+    engine banks it *unfetched* for export-time rank telemetry
+    (repro.obs), so observing veto fires costs the loop nothing.
     """
     rcfg = cfg.rank
     if rcfg.mode == "off":
@@ -183,8 +186,12 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
         rel = jnp.mean(bounds / jnp.maximum(norm[..., None], 1e-30), axis=0)
         rel_c = rel[jnp.argmin(jnp.abs(grid - chosen))]
         switching = has_rank & (chosen != prev_rank)
-        chosen = jnp.where(switching & (rel_c > eps_t), prev_rank, chosen)
+        vetoed = switching & (rel_c > eps_t)
+        chosen = jnp.where(vetoed, prev_rank, chosen)
         chosen = jnp.where(kv_len < 8, g_hi, chosen)
+        # the short-context override is not a veto fire (docstring: "too
+        # little signal; no veto")
+        vetoed = vetoed & (kv_len >= 8)
 
         ranks = jax.lax.dynamic_update_slice_in_dim(
             ranks, chosen[None], slot, 0)
@@ -205,7 +212,7 @@ def make_decide_fn(cfg: ModelConfig, policy_params=None) -> Callable:
             kt_pool = jax.lax.dynamic_update_slice(
                 kt_pool, kt[:, None].astype(kt_pool.dtype),
                 (0, slot, 0, 0, 0))
-        return ranks, basis, spectra, kt_pool
+        return ranks, basis, spectra, kt_pool, vetoed
 
     return decide
 

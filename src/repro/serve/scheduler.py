@@ -167,7 +167,10 @@ class Scheduler:
         return False
 
     def depth(self) -> int:
-        """Requests in the system: queued + admitted (live slots)."""
+        """Requests in the system: queued + admitted (live slots). The
+        router's load signal; the engine also samples ``len(pending)``
+        and :meth:`n_live` into the ``queue.depth`` / ``slots.live``
+        observability gauges at admission time (repro.obs)."""
         return len(self.pending) + self.n_live()
 
     # -- eviction --------------------------------------------------------

@@ -108,3 +108,17 @@ def apply_deferred_mass(mass_pool: jnp.ndarray, contrib: jnp.ndarray,
         mass = mass + (contrib[:, :, q].astype(mass_pool.dtype)
                        * q_ok[None, :, q, None, None])
     return mass
+
+
+def host_accept_stats(acc_h, caps, decoding, draft_k):
+    """Per-step speculative accounting over the already-fetched accept
+    counts — pure host arithmetic, shared by the engine's stats and the
+    obs accept histogram. Returns ``(tokens, accepted, drafted)``:
+    tokens emitted this step across ``decoding`` rows (accept run incl.
+    the bonus token), drafts accepted, and drafts that COULD have been
+    accepted (caps clamp near max_new / segment boundaries, so counting
+    ``draft_k`` flat would bias the accept rate low)."""
+    tokens = sum(int(acc_h[i]) for i in decoding)
+    accepted = sum(int(acc_h[i]) - 1 for i in decoding)
+    drafted = sum(min(draft_k, int(caps[i]) - 1) for i in decoding)
+    return tokens, accepted, drafted

@@ -211,7 +211,7 @@ def test_decide_matches_numpy_oracle():
     k = rnd.normal(size=(L, s, hkv, dh)).astype(np.float32)
     cache.allocate(0, s)
     cache.write_prefill(0, jnp.asarray(k), jnp.asarray(np.zeros_like(k)))
-    ranks, basis, spectra, _ = decide(
+    ranks, basis, spectra, _, _veto = decide(
         cache.k_pool, cache.mass_pool, cache.kt_pool,
         jnp.asarray(cache.page_table),
         jnp.asarray(cache.lens, jnp.int32), cache.ranks,

@@ -84,7 +84,8 @@ def test_serve_halfrank_agreement_weighted_basis():
             m = jnp.swapaxes(mass[:, slot], 1, 2) if weighted else None
             cache.write_prefill(slot, qkv["k"][:, slot], qkv["v"][:, slot],
                                 mass_layers=m)
-            cache.ranks, cache.basis, cache.spectra, cache.kt_pool = decide(
+            (cache.ranks, cache.basis, cache.spectra, cache.kt_pool,
+             _veto) = decide(
                 cache.k_pool, cache.mass_pool, cache.kt_pool,
                 jnp.asarray(cache.page_table),
                 jnp.asarray(cache.lens, jnp.int32), cache.ranks,
@@ -253,7 +254,8 @@ def test_random_mode_folds_slot_into_key():
     draws = {0: [], 1: []}
     for slot in (0, 1):
         for t in range(8):
-            cache.ranks, cache.basis, cache.spectra, cache.kt_pool = decide(
+            (cache.ranks, cache.basis, cache.spectra, cache.kt_pool,
+             _veto) = decide(
                 cache.k_pool, cache.mass_pool, cache.kt_pool,
                 jnp.asarray(cache.page_table),
                 jnp.asarray(cache.lens, jnp.int32), cache.ranks,
@@ -284,18 +286,22 @@ def test_veto_uses_previous_segment_spectra():
                       cache.basis, cache.spectra, np.int32(0),
                       np.bool_(has_rank), np.int32(0))
 
-    ranks, basis, spectra, kt = run_decide(False)
+    ranks, basis, spectra, kt, veto = run_decide(False)
     natural = int(ranks[0])
+    # a first decision has no previous rank to veto against
+    assert not bool(veto)
     # first decision persisted its layer-0 spectra
     assert float(jnp.abs(spectra[0]).max()) > 0.0
     # normal transition: same K, stored spectra == current -> no veto, the
     # slot re-chooses its natural rank even from a different prev rank
     cache.spectra = spectra
     cache.ranks = jnp.asarray([4 if natural != 4 else 16], jnp.int32)
-    ranks2, _, _, _ = run_decide(True)
+    ranks2, _, _, _, veto2 = run_decide(True)
     assert int(ranks2[0]) == natural
+    assert not bool(veto2)
     # fabricated huge flat previous spectrum -> relative bound >> eps_t ->
-    # the veto keeps the previous rank
+    # the veto keeps the previous rank, and reports the fire
     cache.spectra = jnp.full_like(cache.spectra, 1e8)
-    ranks3, _, _, _ = run_decide(True)
+    ranks3, _, _, _, veto3 = run_decide(True)
     assert int(ranks3[0]) == int(cache.ranks[0]) != natural
+    assert bool(veto3)

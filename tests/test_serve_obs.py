@@ -1,0 +1,361 @@
+"""Observability layer (repro.obs).
+
+Covers the layer from primitives up through the serving stack:
+  * metrics primitives: counter/gauge/histogram semantics, percentile
+    interpolation + clamping, kind-mismatch rejection, the StatsView
+    dict shim (reads, ``+=`` writes, reset-by-rebind), and the fleet
+    rollup (counters sum, histograms merge bucket-wise, bound mismatch
+    rejected),
+  * exporter formats: Prometheus text exposition shape, Chrome trace
+    documents validate against the schema subset and survive a JSON
+    round-trip (the validator itself is exercised on broken docs),
+  * flight recorder: bounded ring, dump files parse, no-directory and
+    crash paths never raise,
+  * engine integration: metrics + tracing ON is token-identical to OFF
+    (greedy/factored and seeded-sampled/dense), request counters and
+    TTFT samples line up with the workload, rank telemetry is sane,
+  * FrontEnd integration: a raising step dumps the flight ring with
+    reason "step_exception" before handles are stopped; concurrent
+    exporter reads during background stepping never trip the writer.
+"""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import RankConfig
+from repro.models.api import get_model
+from repro.obs import (FlightRecorder, Gauge, Histogram, MetricsRegistry,
+                       SpanTracer, StatsView, Stopwatch, aggregate,
+                       aggregate_registry, validate_chrome_trace)
+from repro.serve import (Engine, EngineConfig, EngineStopped, FrontEnd,
+                         SamplingParams)
+
+pytestmark = pytest.mark.serve
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    r = MetricsRegistry()
+    c = r.counter("toks")
+    c.inc()
+    c.inc(5)
+    assert c.get() == 6 and r.get("toks") is c
+    g = r.gauge("depth")
+    g.set(3)
+    g.set(1)
+    assert g.get() == 1
+    # get-or-create returns the same object; kind mismatch is an error
+    assert r.counter("toks") is c
+    with pytest.raises(TypeError):
+        r.gauge("toks")
+    with pytest.raises(TypeError):
+        r.histogram("depth")
+    c.zero()
+    assert c.get() == 0
+    snap = r.snapshot()
+    assert snap == {"toks": 0, "depth": 1}
+
+
+def test_histogram_percentiles_and_clamp():
+    h = Histogram("lat", bounds=[0.001, 0.01, 0.1, 1.0])
+    for v in [0.002, 0.003, 0.004, 0.005, 0.05, 0.5]:
+        h.observe(v)
+    assert h.count == 6
+    assert h.mean() == pytest.approx(sum([0.002, 0.003, 0.004, 0.005,
+                                          0.05, 0.5]) / 6)
+    # percentiles are interpolated but always clamped to [vmin, vmax]
+    for q in (0, 25, 50, 90, 99, 100):
+        assert h.vmin <= h.percentile(q) <= h.vmax
+    assert h.percentile(50) <= 0.01    # 4 of 6 samples in (0.001, 0.01]
+    # overflow bucket: above the top bound still counted, clamped to vmax
+    h.observe(50.0)
+    assert h.count == 7 and h.percentile(100) == 50.0
+    empty = Histogram("e", bounds=[1.0])
+    assert empty.percentile(50) == 0.0 and empty.export()["min"] is None
+
+
+def test_statsview_dict_shim():
+    r = MetricsRegistry()
+    sv = StatsView(r, {"steps": 0, "decode_s": 0.0, "eff_draft_k": 4},
+                   gauges=("eff_draft_k",))
+    sv["steps"] += 3
+    sv["decode_s"] += 0.25
+    sv["eff_draft_k"] = 2
+    assert sv["steps"] == 3 and dict(sv) == {"steps": 3, "decode_s": 0.25,
+                                             "eff_draft_k": 2}
+    assert len(sv) == 3 and set(sv) == {"steps", "decode_s", "eff_draft_k"}
+    # the view writes through to the registry (and respects gauge kinds)
+    assert r.get("serve.steps").value == 3
+    assert isinstance(r.get("serve.eff_draft_k"), Gauge)
+    assert not isinstance(r.get("serve.steps"), Gauge)
+    with pytest.raises(TypeError):
+        del sv["steps"]
+    # re-binding the same keys (engine reset) re-zeroes to init values
+    sv2 = StatsView(r, {"steps": 0, "decode_s": 0.0, "eff_draft_k": 4},
+                    gauges=("eff_draft_k",))
+    assert dict(sv2) == {"steps": 0, "decode_s": 0.0, "eff_draft_k": 4}
+    assert r.get("serve.steps").value == 0
+
+
+def test_aggregate_fleet_rollup():
+    regs = []
+    for n in (2, 5):
+        r = MetricsRegistry()
+        r.counter("toks").inc(n)
+        r.gauge("depth").set(n)
+        h = r.histogram("lat", bounds=[1.0, 10.0])
+        h.observe(float(n))
+        regs.append(r)
+    regs[0].counter("only_a").inc(7)           # absent from replica 1
+    merged = aggregate(regs)
+    assert merged["toks"] == 7 and merged["depth"] == 7
+    assert merged["only_a"] == 7
+    assert merged["lat"]["count"] == 2 and merged["lat"]["sum"] == 7.0
+    assert merged["lat"]["min"] == 2.0 and merged["lat"]["max"] == 5.0
+    # the rollup is a detached copy: mutating it leaves shards alone
+    out = aggregate_registry(regs)
+    out.counter("toks").inc(100)
+    assert regs[0].counter("toks").value == 2
+    # histogram bound mismatch is a structural error, not a silent merge
+    bad = MetricsRegistry()
+    bad.histogram("lat", bounds=[1.0, 99.0]).observe(1.0)
+    with pytest.raises(TypeError):
+        aggregate_registry([regs[0], bad])
+
+
+def test_prometheus_text_format():
+    r = MetricsRegistry()
+    r.counter("serve.tokens_decoded").inc(12)
+    h = r.histogram("serve.ttft_s", bounds=[0.1, 1.0])
+    h.observe(0.05)
+    h.observe(0.5)
+    text = r.prometheus_text("repro")
+    lines = text.strip().split("\n")
+    assert "# TYPE repro_serve_tokens_decoded counter" in lines
+    assert "repro_serve_tokens_decoded 12" in lines
+    assert "# TYPE repro_serve_ttft_s histogram" in lines
+    # cumulative buckets + +Inf + sum/count
+    assert 'repro_serve_ttft_s_bucket{le="0.1"} 1' in lines
+    assert 'repro_serve_ttft_s_bucket{le="1"} 2' in lines
+    assert 'repro_serve_ttft_s_bucket{le="+Inf"} 2' in lines
+    assert "repro_serve_ttft_s_count 2" in lines
+
+
+def test_stopwatch_disabled_is_none():
+    assert Stopwatch(False).stop() is None
+    sw = Stopwatch()
+    assert sw.stop() >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# tracer + validator
+# ---------------------------------------------------------------------------
+
+def test_tracer_emits_valid_round_trippable_trace():
+    tr = SpanTracer(pid=3, capacity=100)
+    tr.async_begin("request", 7, args={"rid": 7})
+    tr.instant("first_token", tid=1, cat="request")
+    tr.complete("dispatch", tr.now_us(), 12.5, tid=1000, cat="phase")
+    tr.counter("queue", {"depth": 2.0})
+    tr.async_end("request", 7, args={"reason": "eos"})
+    doc = tr.chrome_trace(metadata={"engine_id": 3})
+    assert validate_chrome_trace(doc) == []
+    rt = json.loads(json.dumps(doc))
+    assert rt == doc and rt["otherData"]["engine_id"] == 3
+    # capacity bound: overflow drops (counted), never grows the buffer
+    small = SpanTracer(capacity=2)
+    for _ in range(5):
+        small.instant("x")
+    assert len(small.events) == 2 and small.dropped == 3
+    small.clear()
+    assert small.events == [] and small.dropped == 0
+
+
+def test_trace_validator_rejects_malformed():
+    assert validate_chrome_trace([]) == ["document is not a JSON object"]
+    assert validate_chrome_trace({}) == ["traceEvents missing or not a list"]
+    bad_ph = {"traceEvents": [{"name": "x", "ph": "Z", "pid": 0, "tid": 0,
+                               "ts": 0.0}]}
+    assert any("bad ph" in e for e in validate_chrome_trace(bad_ph))
+    no_dur = {"traceEvents": [{"name": "x", "ph": "X", "pid": 0, "tid": 0,
+                               "ts": 0.0}]}
+    assert any("dur" in e for e in validate_chrome_trace(no_dur))
+    orphan_end = {"traceEvents": [{"name": "r", "ph": "e", "id": "1",
+                                   "cat": "request", "pid": 0, "tid": 0,
+                                   "ts": 0.0}]}
+    assert any("end without begin" in e
+               for e in validate_chrome_trace(orphan_end))
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_ring_and_dump(tmp_path):
+    fr = FlightRecorder(4, str(tmp_path), name="t")
+    for i in range(10):
+        fr.record("tick", i=i)
+    assert len(fr.events) == 4 and fr.n_recorded == 10
+    assert [e["i"] for e in fr.events] == [6, 7, 8, 9]   # newest survive
+    path = fr.dump("unit_test", metrics={"toks": 3},
+                   error=RuntimeError("boom"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["reason"] == "unit_test" and doc["events_recorded"] == 10
+    assert [e["i"] for e in doc["events"]] == [6, 7, 8, 9]
+    assert doc["metrics"] == {"toks": 3}
+    assert "boom" in doc["error"]
+    # no directory configured: recording works, dump is a silent no-op
+    off = FlightRecorder(4, None)
+    off.record("tick")
+    assert off.dump("nowhere") is None
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("drrl-paper", reduced=True).with_(
+        rank=RankConfig(mode="adaptive", rank_grid=(4, 8, 12, 16),
+                        fixed_rank=8, segment_len=8))
+    return cfg, get_model(cfg).init(RNG)
+
+
+def _prompts(n, seed=0, lo=8, hi=14):
+    rnd = np.random.default_rng(seed)
+    return [rnd.integers(0, 256, int(rnd.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _run(cfg, params, sps, prompts, *, obs_trace, sampling, factor,
+         flight_dir=None):
+    eng = Engine(cfg, params, config=EngineConfig(
+        n_slots=2, max_len=48, page_size=8, segment_len=8, max_new_cap=8,
+        prefill_chunk=8, factor_cache=factor, sampling=sampling,
+        obs_trace=obs_trace, flight_dir=flight_dir))
+    hs = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+    eng.run()
+    return eng, {h.rid: h.result().tolist() for h in hs}
+
+
+@pytest.mark.parametrize("factor,sampling", [(True, False), (False, True)],
+                         ids=["factor-greedy", "dense-sampled"])
+def test_obs_on_off_token_parity(setup, factor, sampling, tmp_path):
+    """Tracing + metrics ON must not change a single emitted token, and
+    the exports must describe the workload exactly."""
+    cfg, params = setup
+    prompts = _prompts(3, seed=1)
+    if sampling:
+        sps = [SamplingParams(max_new=6, temperature=0.8, top_k=8, seed=i)
+               for i in range(3)]
+    else:
+        sps = [SamplingParams(max_new=6) for _ in range(3)]
+    _, ref = _run(cfg, params, sps, prompts, obs_trace=False,
+                  sampling=sampling, factor=factor)
+    eng, out = _run(cfg, params, sps, prompts, obs_trace=True,
+                    sampling=sampling, factor=factor,
+                    flight_dir=str(tmp_path))
+    assert out == ref
+
+    snap = eng.obs.snapshot()
+    m = snap["metrics"]
+    assert m["requests.admitted"] == 3 and m["requests.finished"] == 3
+    assert m["requests.cancelled"] == 0
+    assert m["serve.ttft_s"]["count"] == 3
+    assert m["serve.tokens_decoded"] == eng.stats["tokens_decoded"]
+    assert snap["trace"]["enabled"] and snap["trace"]["dropped"] == 0
+
+    doc = eng.obs.chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    assert json.loads(json.dumps(doc)) == doc
+    evs = doc["traceEvents"]
+    assert sum(e["ph"] == "b" for e in evs) == 3    # one span per request
+    assert sum(e["ph"] == "e" for e in evs) == 3
+    phases = {e["name"] for e in evs if e.get("cat") == "phase"}
+    assert phases == {"schedule", "admit", "decide", "dispatch", "fetch",
+                      "deliver"}
+
+    prom = eng.obs.prometheus()
+    assert "# TYPE repro_requests_admitted counter" in prom
+    assert "repro_requests_admitted 3" in prom
+    assert 'repro_serve_ttft_s_bucket{le="+Inf"} 3' in prom
+
+    tel = eng.obs.rank_telemetry(eng.core)
+    assert 0 < tel["steps_recorded"] <= eng.stats["steps"]
+    assert tel["decisions"] == eng.stats["decides"] > 0
+    assert tel["veto_fires"] >= 0 and tel["per_layer_uniform"]
+    grid = set(cfg.rank.rank_grid) | {-1}
+    assert all(v in grid for row in tel["kept_rank"] for v in row)
+
+
+def test_frontend_step_exception_dumps_flight_ring(setup, tmp_path):
+    cfg, params = setup
+    eng = Engine(cfg, params, config=EngineConfig(
+        n_slots=2, max_len=48, page_size=8, segment_len=8, max_new_cap=8,
+        prefill_chunk=8, flight_dir=str(tmp_path)))
+
+    def boom():
+        raise RuntimeError("injected step failure")
+
+    eng.core.step = boom
+    fe = FrontEnd(eng, idle_poll_s=0.01, warmup=False)
+    try:
+        # the thread may die before or after submit returns — the raise
+        # surfaces at whichever call touches the dead front end first
+        with pytest.raises(EngineStopped):
+            h = fe.submit(_prompts(1, seed=2)[0], SamplingParams(max_new=4))
+            h.result()
+    finally:
+        fe.shutdown(drain=False)
+    dumps = sorted(tmp_path.glob("flight_*.json"))
+    assert dumps, "no flight dump written on step exception"
+    with open(dumps[0]) as f:
+        doc = json.load(f)
+    assert doc["reason"] == "step_exception"
+    assert "injected step failure" in doc["error"]
+    assert "metrics" in doc
+
+
+def test_registry_reads_safe_under_background_stepping(setup):
+    """Exporters are documented as any-thread-safe: hammer them from a
+    reader thread while the FrontEnd's stepping thread is writing."""
+    cfg, params = setup
+    eng = Engine(cfg, params, config=EngineConfig(
+        n_slots=2, max_len=48, page_size=8, segment_len=8, max_new_cap=8,
+        prefill_chunk=8, obs_trace=True))
+    stop = threading.Event()
+    errors, reads = [], [0]
+
+    def reader():
+        try:
+            while not stop.is_set():
+                snap = eng.obs.snapshot()
+                assert snap["metrics"]["requests.admitted"] >= 0
+                eng.obs.prometheus()
+                json.dumps(eng.obs.chrome_trace())
+                reads[0] += 1
+        except Exception as e:   # surfaced after join — threads can't fail a test
+            errors.append(e)
+
+    t = threading.Thread(target=reader, daemon=True)
+    with FrontEnd(eng, idle_poll_s=0.01) as fe:
+        t.start()
+        hs = [fe.submit(p, SamplingParams(max_new=6))
+              for p in _prompts(4, seed=3)]
+        outs = [h.result() for h in hs]
+    stop.set()
+    t.join(timeout=5)
+    assert not errors and reads[0] > 0
+    assert all(len(o) == 6 for o in outs)
+    assert eng.obs.snapshot()["metrics"]["requests.finished"] == 4
